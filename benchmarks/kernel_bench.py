@@ -1,0 +1,67 @@
+"""Microbenchmarks of the table-approximation runtimes on the host CPU.
+
+CPU wall-times are NOT the TPU performance story (that is the roofline analysis,
+benchmarks/roofline.py); these timings validate relative behaviour: the table_ref
+path must be within a small factor of the exact transcendental, and costs must be
+flat in the number of sub-intervals (the paper's constant-latency claim, Fig. 7,
+mapped to SIMD: the comparator plane is O(n) FMAs but n<=32 is noise vs memory
+traffic)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx import ApproxConfig
+from repro.core import build_table
+
+
+def _time(f, *args, reps=20) -> float:
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def activation_bench(size: int = 1 << 20) -> List[tuple]:
+    rows = []
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 3, size).astype(np.float32))
+    for name in ("gelu", "silu", "tanh"):
+        exact = jax.jit(ApproxConfig(mode="exact").unary(name))
+        table = jax.jit(ApproxConfig(mode="table_ref", e_a=1e-4,
+                                     algorithm="hierarchical", omega=0.2).unary(name))
+        te = _time(exact, x)
+        tt = _time(table, x)
+        rows.append((f"kernel.{name}.exact_us", round(te, 1), f"n={size}"))
+        rows.append((f"kernel.{name}.table_ref_us", round(tt, 1),
+                     f"ratio={tt / te:.2f}x"))
+        print(f"[kernel] {name:6s} exact={te:8.1f}us  table_ref={tt:8.1f}us  "
+              f"ratio={tt / te:.2f}x")
+    return rows
+
+
+def interval_count_flatness(size: int = 1 << 18) -> List[tuple]:
+    """Constant-latency claim: runtime flat vs #sub-intervals (omega sweep)."""
+    rows = []
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 3, size).astype(np.float32))
+    times = []
+    for omega in (0.9, 0.3, 0.1, 0.02):
+        cfg = ApproxConfig(mode="table_ref", e_a=1e-5, algorithm="hierarchical",
+                           omega=omega)
+        jt = cfg.table_for("gelu")
+        f = jax.jit(cfg.unary("gelu"))
+        t = _time(f, x)
+        times.append(t)
+        rows.append((f"kernel.flatness.omega{omega}", round(t, 1),
+                     f"n_intervals={jt.n_intervals}"))
+        print(f"[flatness] omega={omega:4.2f} n={jt.n_intervals:3d} t={t:8.1f}us")
+    spread = max(times) / min(times)
+    rows.append(("kernel.flatness.spread", round(spread, 2),
+                 "CPU serializes the compare chain; flat on the TPU VPU"))
+    return rows

@@ -1,0 +1,148 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline) — analytic cost model joined with
+the dry-run's compiled artifacts.
+
+Terms per (arch x shape x mesh) cell, in SECONDS of one step on one v5e chip:
+
+    compute    = FLOPs_per_device / 197e12      (bf16 peak)
+    memory     = HBM_bytes_per_device / 819e9
+    collective = collective_bytes_per_device / 50e9   (per-link ICI)
+
+FLOPs/bytes come from ``benchmarks.cost_model`` (itemized analytic model) because
+XLA's cost_analysis counts scan bodies exactly once (verified; see cost_model
+docstring) — the compiled-HLO numbers are kept in dryrun.json as per-iteration
+cross-checks, and ``memory_analysis()`` (loop-aware) remains the fits-check.
+
+Reported per cell:
+  * the three terms + dominant bound,
+  * MODEL_FLOPS (6*N_active*D train / 2*N_active*D serve) and the useful ratio
+    MODEL_FLOPS / analytic FLOPs (remat + padding + capacity waste),
+  * roofline fraction = t_ideal / t_bound, where t_ideal is the useful-FLOPs
+    time (train/prefill) or the minimal-traffic time (decode: bf16 params +
+    cache read once),
+  * one-line note on what moves the dominant term.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from repro.models import get_config, shapes_for
+
+from benchmarks.cost_model import cell_costs
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+OUT_MD = os.path.join(os.path.dirname(__file__), "results", "roofline.md")
+
+
+def analyze(arch: str, shape_name: str, mesh: str, variant: str = "base") -> Dict:
+    cfg = get_config(arch)
+    shape = {s.name: s for s in shapes_for(cfg)}[shape_name]
+    pods = 2 if mesh == "2x16x16" else 1
+    c = cell_costs(cfg, shape, n_chips=256 * pods, data_shards=16,
+                   model_shards=16, pods=pods, variant=variant)
+    t_compute = c.flops_dev / PEAK_FLOPS
+    t_memory = c.hbm_bytes_dev / HBM_BW
+    t_coll = c.coll_bytes_dev / LINK_BW
+    t_bound = max(t_compute, t_memory, t_coll)
+    dominant = ("compute" if t_bound == t_compute
+                else "memory" if t_bound == t_memory else "collective")
+    if shape.kind == "decode":
+        t_ideal = c.ideal_bytes_dev / HBM_BW
+    else:
+        t_ideal = c.ideal_flops_dev / PEAK_FLOPS
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "useful_ratio": (c.ideal_flops_dev / c.flops_dev
+                         if c.flops_dev > 0 else 0.0),
+        "roofline_fraction": t_ideal / t_bound if t_bound > 0 else 0.0,
+        "model_flops_global": c.ideal_flops_dev * 256 * pods,
+        "hbm_gb_per_dev": c.hbm_bytes_dev / 1e9,
+        "coll_gb_per_dev": c.coll_bytes_dev / 1e9,
+        "kind": shape.kind,
+    }
+
+
+def suggest(a: Dict) -> str:
+    if a["dominant"] == "collective":
+        return ("collective-bound: overlap grad all-reduce with bwd, bf16-compress "
+                "cross-pod, or reshard the psum-heavy projections")
+    if a["dominant"] == "memory":
+        if a["kind"] == "decode":
+            return ("HBM-bound decode: quantize KV/params, raise batch, or "
+                    "split cache reads across chips (flash-decoding)")
+        if a["useful_ratio"] < 0.5:
+            return "HBM-bound, low useful ratio: cut remat traffic / fuse temps"
+        return "HBM-bound: bf16 master cast once, fuse elementwise, bigger tiles"
+    if a["useful_ratio"] < 0.5:
+        return (f"compute-bound, useful={a['useful_ratio']:.2f}: cut remat/"
+                "padding/capacity waste")
+    return "compute-bound at high useful ratio: near roofline"
+
+
+def load() -> Dict[str, Dict]:
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def report(mesh_filter: str = "16x16", variant: str = "base") -> List[Dict]:
+    results = load()
+    rows = []
+    for key, rec in sorted(results.items()):
+        arch, shape, mesh, var = key.split("|")
+        if rec.get("status") != "ok" or mesh != mesh_filter or var != variant:
+            continue
+        a = analyze(arch, shape, mesh, var)
+        temp_gb = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
+        arg_gb = rec["memory"].get("argument_size_in_bytes", 0) / 1e9
+        rows.append({
+            "arch": arch, "shape": shape, "mesh": mesh, **a,
+            "note": suggest(a), "compile_s": rec["compile_s"],
+            "temp_gb": temp_gb, "arg_gb": arg_gb,
+            "fits_16gb": bool(arg_gb + temp_gb <= 16.0),
+            "hlo_flops_per_iter": rec.get("flops_per_device", -1),
+        })
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | bound | "
+           "useful | roofline frac | HBM GB/dev | arg+temp GB | fits 16G | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+                 f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+                 f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+                 f"{r['roofline_fraction']:.3f} | {r['hbm_gb_per_dev']:.1f} | "
+                 f"{r['arg_gb'] + r['temp_gb']:.1f} | "
+                 f"{'Y' if r['fits_16gb'] else 'N'} | {r['note']} |\n")
+    return hdr + body
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--variant", default="base")
+    args = ap.parse_args()
+    rows = report(args.mesh, args.variant)
+    md = to_markdown(rows)
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write(md)
+    print(md)
+    print(f"({len(rows)} cells; written to {OUT_MD})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark harness: one function per paper table/figure + kernel microbenches +
+(if dry-run results exist) the roofline summary.
+
+Prints ``name,value,derived`` CSV rows at the end.
+
+  PYTHONPATH=src python -m benchmarks.run            # default (fast) populations
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale populations
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale populations (slow)")
+    ap.add_argument("--skip-fig6", action="store_true")
+    args = ap.parse_args()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import kernel_bench, paper_figs
+
+    t0 = time.time()
+    rows = []
+    rows += paper_figs.fig3_reference()
+    rows += paper_figs.fig45_worked_examples()
+    if not args.skip_fig6:
+        n = 100 if args.full else 12
+        omegas = None if args.full else [0.01, 0.03, 0.05, 0.08, 0.12, 0.16,
+                                         0.2, 0.24, 0.27, 0.3]
+        fig6_rows, samples = paper_figs.fig6_omega_sweep(
+            n_intervals=n, omegas=omegas,
+            eps_frac=(1 / 1000 if args.full else 1 / 150))
+        rows += fig6_rows
+        rows += paper_figs.table2_ttests(samples)
+    rows += paper_figs.table3_synthesis()
+    rows += paper_figs.table3_fidelity()
+    rows += paper_figs.table3_packing()
+    rows += kernel_bench.activation_bench(1 << 20 if args.full else 1 << 18)
+    rows += kernel_bench.interval_count_flatness()
+
+    # roofline summary if the dry-run has produced results
+    try:
+        from benchmarks import roofline
+
+        rrows = roofline.report()
+        for r in rrows:
+            rows.append((f"roofline.{r['arch']}.{r['shape']}.fraction",
+                         round(r["roofline_fraction"], 3), r["dominant"]))
+        if rrows:
+            with open(roofline.OUT_MD, "w") as f:
+                f.write(roofline.to_markdown(rrows))
+            print(f"[roofline] {len(rrows)} cells summarised -> {roofline.OUT_MD}")
+    except FileNotFoundError:
+        print("[roofline] no dry-run results yet (run repro.launch.dryrun)")
+
+    print(f"\n# total bench time: {time.time() - t0:.1f}s")
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end driver: train a reduced LM whose every nonlinearity runs through
+the paper's interval-split function tables, for a few hundred steps, with
+checkpointing — then show the exact-vs-table ablation.
+
+This is the 100M-class training example scaled to the CPU container (a ~9M-param
+stablelm-family model; pass --steps/--dim to scale up on real hardware).
+
+Run:  PYTHONPATH=src python examples/train_tabla_lm.py --steps 120
+"""
+
+import argparse
+import time
+
+from repro.approx import ApproxConfig
+from repro.models import ShapeSpec, build_model, get_config
+from repro.models.config import MoEConfig
+from repro.optim import adamw
+from repro.train.loop import TrainConfig, run
+
+
+def small_cfg(arch="stablelm-3b", dim=192, layers=4, mode="table_ref"):
+    cfg = get_config(arch)
+    return cfg.replace(
+        n_layers=layers, d_model=dim, n_heads=4, n_kv_heads=4, d_ff=dim * 3,
+        vocab=2048, remat=False,
+        approx=ApproxConfig(mode=mode, e_a=1e-4, algorithm="hierarchical",
+                            omega=0.2),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--dim", type=int, default=192)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ablate-exact", action="store_true",
+                    help="also train the exact-activation twin for comparison")
+    ap.add_argument("--ckpt-dir", default="/tmp/tabla_lm_ckpt")
+    args = ap.parse_args()
+
+    shape = ShapeSpec("example", seq_len=args.seq, global_batch=args.batch,
+                      kind="train")
+
+    results = {}
+    modes = ["table_ref"] + (["exact"] if args.ablate_exact else [])
+    for mode in modes:
+        cfg = small_cfg(dim=args.dim, layers=args.layers, mode=mode)
+        model = build_model(cfg)
+        n_params = cfg.param_count()
+        tc = TrainConfig(
+            steps=args.steps, ckpt_every=max(20, args.steps // 3),
+            ckpt_dir=f"{args.ckpt_dir}_{mode}", log_every=20,
+            opt=adamw.AdamWConfig(lr=1e-3, warmup_steps=10,
+                                  total_steps=args.steps),
+        )
+        print(f"--- mode={mode}: {n_params / 1e6:.1f}M params, "
+              f"{args.steps} steps ---")
+        t0 = time.time()
+        out = run(model, shape, tc, mesh=None)
+        dt = time.time() - t0
+        first = sum(out["losses"][:10]) / 10
+        last = sum(out["losses"][-10:]) / 10
+        results[mode] = (first, last)
+        print(f"mode={mode}: loss {first:.4f} -> {last:.4f} "
+              f"({dt / args.steps * 1e3:.0f} ms/step, "
+              f"ckpt at {tc.ckpt_dir})")
+
+    if "exact" in results:
+        t = results["table_ref"][1]
+        e = results["exact"][1]
+        print(f"\nfinal loss — table backend: {t:.4f} vs exact: {e:.4f} "
+              f"(delta {t - e:+.4f}; the paper's Ea bound keeps them close)")
+    print("train_tabla_lm OK")
+
+
+if __name__ == "__main__":
+    main()

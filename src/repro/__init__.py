@@ -1,0 +1,4 @@
+"""repro — interval-split table-based function approximation (Pradhan et al. 2022),
+built out as a multi-pod JAX training/serving framework for TPU."""
+
+__version__ = "1.0.0"

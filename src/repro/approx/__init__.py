@@ -1,0 +1,15 @@
+"""repro.approx — JAX runtime of the paper's table-based function approximation."""
+
+from .activations import EXACT, ApproxConfig, get_exact
+from .jax_table import JaxTable, eval_table_ref, eval_table_slope, from_spec, make_table_fn
+
+__all__ = [
+    "EXACT",
+    "ApproxConfig",
+    "JaxTable",
+    "eval_table_ref",
+    "eval_table_slope",
+    "from_spec",
+    "get_exact",
+    "make_table_fn",
+]

@@ -1,0 +1,114 @@
+"""Nonlinearity backend: every elementary function the model zoo evaluates can run
+``exact`` (jnp transcendentals), ``table_ref`` (paper-faithful jnp table), or
+``table_pallas`` (fused VMEM kernel).  Configured per-model via :class:`ApproxConfig`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flow import cached_table
+from repro.core.functions import get as get_function
+
+from .jax_table import JaxTable, eval_table_ref, from_spec, make_table_fn
+
+Mode = str  # "exact" | "table_ref" | "table_pallas"
+
+_EXACT: Dict[str, Callable] = {
+    "gelu": lambda x: jax.nn.gelu(x, approximate=False),
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "sigmoid_sym": jax.nn.sigmoid,
+    "softplus": jax.nn.softplus,
+    "exp": jnp.exp,
+    "exp_neg": jnp.exp,
+    "erf": jax.scipy.special.erf,
+    "relu": jax.nn.relu,  # piecewise-linear already; never table'd
+    "identity": lambda x: x,
+}
+
+# Registry-name remaps for activations whose table spec differs from the exact name.
+_TABLE_NAME = {
+    "gelu_tanh": "gelu",  # tanh-GELU ~ erf-GELU within 1e-3; table targets exact GELU
+    "sigmoid": "sigmoid_sym",
+    "exp": "exp_neg",
+}
+
+_NEVER_TABLED = {"relu", "identity"}
+
+# Activations with linear asymptotes: extend the edge segments linearly instead of
+# saturating (see jax_table.eval_table_ref docstring).  Flat-asymptote functions
+# (tanh/sigmoid/exp_neg) keep the hardware clamp — it IS their asymptote.
+_EXTRAPOLATE = {"gelu", "gelu_tanh", "silu", "softplus"}
+
+
+@dataclass(frozen=True)
+class ApproxConfig:
+    """How the model evaluates its elementary functions.
+
+    ``e_a`` is the paper's maximum absolute approximation error; ``algorithm`` /
+    ``omega`` select the interval splitter.  ``softmax_table`` additionally routes
+    the attention/router softmax exponent through the exp table (ablation feature).
+    """
+
+    mode: Mode = "exact"
+    e_a: float = 1e-4
+    algorithm: str = "hierarchical"
+    omega: float = 0.3
+    exact_grad: bool = False
+    softmax_table: bool = False
+    interval_overrides: Dict[str, Tuple[float, float]] = field(default_factory=dict)
+
+    def table_for(self, name: str) -> JaxTable:
+        reg_name = _TABLE_NAME.get(name, name)
+        lo, hi = self.interval_overrides.get(reg_name, (None, None))
+        spec = cached_table(
+            reg_name, self.e_a, lo, hi, algorithm=self.algorithm, omega=self.omega
+        )
+        return from_spec(spec)
+
+    def unary(self, name: str) -> Callable[[jax.Array], jax.Array]:
+        """The activation callable for this config."""
+        if self.mode == "exact" or name in _NEVER_TABLED:
+            return _EXACT[name]
+        if self.mode not in ("table_ref", "table_pallas"):
+            raise ValueError(f"unknown approx mode {self.mode!r}")
+        reg_name = _TABLE_NAME.get(name, name)
+        jt = self.table_for(name)
+        exact_d1 = None
+        if self.exact_grad:
+            fn = get_function(reg_name)
+            exact_d1 = partial(fn.d1f, xp=jnp)
+        return make_table_fn(
+            jt,
+            use_pallas=(self.mode == "table_pallas"),
+            exact_d1=exact_d1,
+            extrapolate=(name in _EXTRAPOLATE),
+        )
+
+    def softmax(self, x: jax.Array, axis: int = -1, where=None) -> jax.Array:
+        """Numerically-shifted softmax; exponent optionally via the exp_neg table."""
+        if not self.softmax_table or self.mode == "exact":
+            return jax.nn.softmax(x, axis=axis, where=where)
+        exp_fn = self.unary("exp")
+        m = jnp.max(x, axis=axis, keepdims=True, where=where, initial=-1e30)
+        z = x - jax.lax.stop_gradient(m)
+        # table domain is [-16, 0]; clamp matches the hardware address saturation
+        e = exp_fn(jnp.maximum(z, -16.0))
+        if where is not None:
+            e = jnp.where(where, e, 0.0)
+        return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+EXACT = ApproxConfig(mode="exact")
+
+
+def get_exact(name: str) -> Callable:
+    return _EXACT[name]

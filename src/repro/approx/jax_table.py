@@ -1,0 +1,160 @@
+"""JAX runtime of a :class:`repro.core.table.TableSpec`.
+
+The evaluation mirrors the paper's Fig. 7 circuit, adapted to a SIMD machine
+(see DESIGN.md §2):
+
+  interval selector  — branchless comparator *plane*: one vector compare per interior
+                       boundary, accumulated into running selects of (p_j, inv_d_j,
+                       base_j, seg_j).  No gather, no tree: cost is n-1 FMAs/compares
+                       per element, n = #sub-intervals (<= ~32 in practice).
+  address generator  — i = floor((x - p_j) * inv_d_j), clamped to the sub-table.
+  BRAM lookup        — one adjacent-pair gather from the packed values vector.
+  interpolation      — a single FMA: y0 + t * (y1 - y0).
+
+``eval_table_ref`` is the pure-jnp oracle (differentiable via the table slope through
+``make_table_fn``); the Pallas kernel in ``repro.kernels.table_lookup`` implements the
+same contract with the table VMEM-resident.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.table import TableSpec
+
+
+class JaxTable(NamedTuple):
+    """Device-ready table artifact (all leaves are jnp arrays; shapes static)."""
+
+    boundaries: jax.Array  # (n+1,) f32
+    inv_delta: jax.Array  # (n,)   f32
+    delta: jax.Array  # (n,)   f32
+    base: jax.Array  # (n,)   f32 (exact integers < 2^24; float keeps the VPU path)
+    seg_count: jax.Array  # (n,)   f32
+    values: jax.Array  # (M_F,) f32
+
+    @property
+    def n_intervals(self) -> int:
+        return self.inv_delta.shape[0]
+
+    @property
+    def footprint(self) -> int:
+        return self.values.shape[0]
+
+
+def from_spec(spec: TableSpec, dtype=jnp.float32) -> JaxTable:
+    if spec.footprint >= (1 << 24):
+        raise ValueError("table footprint exceeds f32 exact-integer range")
+    return JaxTable(
+        boundaries=jnp.asarray(spec.boundaries, dtype=dtype),
+        inv_delta=jnp.asarray(spec.inv_delta, dtype=dtype),
+        delta=jnp.asarray(spec.delta, dtype=dtype),
+        base=jnp.asarray(spec.base.astype(np.float64), dtype=dtype),
+        seg_count=jnp.asarray(spec.seg_count.astype(np.float64), dtype=dtype),
+        values=jnp.asarray(spec.values, dtype=dtype),
+    )
+
+
+def _select_params(jt: JaxTable, xf: jax.Array):
+    """Comparator plane: per-element (p_j, inv_d_j, base_j, seg_j) as running sums.
+
+    For sorted boundaries b_0..b_n the sub-interval parameters are
+        p(x) = b_0 + sum_m [x >= b_m] (b_m - b_{m-1})   (same for invd/base/segs)
+    i.e. a mux tree flattened into FMAs — no gather, no branches.
+    """
+    p = jnp.full_like(xf, jt.boundaries[0])
+    invd = jnp.full_like(xf, jt.inv_delta[0])
+    base = jnp.full_like(xf, jt.base[0])
+    segs = jnp.full_like(xf, jt.seg_count[0])
+    for m in range(1, jt.n_intervals):
+        ge = (xf >= jt.boundaries[m]).astype(jnp.float32)
+        p = p + ge * (jt.boundaries[m] - jt.boundaries[m - 1])
+        invd = invd + ge * (jt.inv_delta[m] - jt.inv_delta[m - 1])
+        base = base + ge * (jt.base[m] - jt.base[m - 1])
+        segs = segs + ge * (jt.seg_count[m] - jt.seg_count[m - 1])
+    return p, invd, base, segs
+
+
+def eval_table_ref(jt: JaxTable, x: jax.Array, *, extrapolate: bool = False) -> jax.Array:
+    """Pure-jnp table evaluation — the oracle for the Pallas kernel.
+
+    ``extrapolate=False`` saturates out-of-interval inputs at the edge breakpoint
+    values (the hardware's address clamp).  ``extrapolate=True`` instead lets the
+    *edge segments* extend linearly (the lerp parameter is left unclamped), which is
+    the right semantic for activations with linear asymptotes (gelu/silu/softplus):
+    zero extra hardware, asymptotically-correct tails.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    p, invd, base, segs = _select_params(jt, xf)
+    u = (xf - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    y0 = jnp.take(jt.values, a, axis=0)
+    y1 = jnp.take(jt.values, a + 1, axis=0)
+    t = u - i
+    if not extrapolate:
+        t = jnp.clip(t, 0.0, 1.0)
+    return (y0 + t * (y1 - y0)).astype(dtype)
+
+
+def eval_table_slope(
+    jt: JaxTable, x: jax.Array, *, extrapolate: bool = False
+) -> jax.Array:
+    """d/dx of the piecewise-linear surrogate: the segment slope (a.e. derivative)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    p, invd, base, segs = _select_params(jt, xf)
+    i = jnp.clip(jnp.floor((xf - p) * invd), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    y0 = jnp.take(jt.values, a, axis=0)
+    y1 = jnp.take(jt.values, a + 1, axis=0)
+    slope = (y1 - y0) * invd
+    if not extrapolate:
+        inside = (xf >= jt.boundaries[0]) & (xf < jt.boundaries[-1])
+        slope = slope * inside.astype(jnp.float32)
+    return slope.astype(dtype)
+
+
+def make_table_fn(
+    jt: JaxTable,
+    *,
+    use_pallas: bool = False,
+    exact_d1=None,
+    extrapolate: bool = False,
+):
+    """Build a differentiable unary ``f(x)`` from a table.
+
+    Tangent rule: table slope by default (faithful to what the hardware computes);
+    pass ``exact_d1`` (a jnp-callable) to use the analytic derivative instead.
+    """
+    if use_pallas:
+        from repro.kernels.ops import table_lookup as fwd_impl  # lazy; optional dep
+        from repro.kernels.table_grad import table_lookup_grad_pallas
+    else:
+        fwd_impl = eval_table_ref
+        table_lookup_grad_pallas = None
+
+    @jax.custom_jvp
+    def f(x):
+        return fwd_impl(jt, x, extrapolate=extrapolate)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        if exact_d1 is not None:
+            y = fwd_impl(jt, x, extrapolate=extrapolate)
+            slope = exact_d1(x)
+        elif use_pallas:
+            # fused kernel: one selector pass yields value AND slope
+            y, slope = table_lookup_grad_pallas(jt, x, extrapolate=extrapolate)
+        else:
+            y = fwd_impl(jt, x, extrapolate=extrapolate)
+            slope = eval_table_slope(jt, x, extrapolate=extrapolate)
+        return y, slope * dx
+
+    return f

@@ -1,0 +1,19 @@
+"""stablelm-3b [dense]: 32L d=2560 32H (MHA) d_ff=6912 vocab=50304
+[hf:stabilityai/stablelm family]."""
+
+from repro.approx import ApproxConfig
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-3b",
+    family="dense",
+    n_layers=32,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=6912,
+    vocab=50304,
+    act="silu",
+    approx=ApproxConfig(mode="table_ref", e_a=1e-4, algorithm="hierarchical",
+                        omega=0.2),
+)

@@ -1,0 +1,49 @@
+"""repro.core — the paper's contribution: interval-split table-based function
+approximation (spacing rule, three splitting algorithms, packed tables, resource
+models, design flow)."""
+
+from .functions import FunctionSpec, get as get_function, names as function_names
+from .spacing import SecondDerivMax, delta_for, footprint, reference_spacing
+from .splitting import (
+    ALGORITHMS,
+    SplitResult,
+    binary_split,
+    hierarchical_split,
+    sequential_split,
+    split,
+)
+from .table import TableSpec, build_table
+from .flow import FlowReport, cached_table, run_flow
+from .bram import bram_count, bram_count_packed, vmem_cost
+from .quantize import FixedPointFormat, PAPER_FORMATS
+from .stats import TTestResult, outperforms, t_cdf, ttest2
+
+__all__ = [
+    "ALGORITHMS",
+    "FixedPointFormat",
+    "FlowReport",
+    "FunctionSpec",
+    "PAPER_FORMATS",
+    "SecondDerivMax",
+    "SplitResult",
+    "TTestResult",
+    "TableSpec",
+    "binary_split",
+    "bram_count",
+    "bram_count_packed",
+    "build_table",
+    "cached_table",
+    "delta_for",
+    "footprint",
+    "function_names",
+    "get_function",
+    "hierarchical_split",
+    "outperforms",
+    "reference_spacing",
+    "run_flow",
+    "sequential_split",
+    "split",
+    "t_cdf",
+    "ttest2",
+    "vmem_cost",
+]

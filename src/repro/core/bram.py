@@ -1,0 +1,79 @@
+"""Memory-packing cost models: Xilinx BRAM18 (the paper's) and TPU VMEM (ours).
+
+The paper (Sec. 7.2.1) counts BRAM18 primitives for 32-bit entries as
+
+    #BRAM = 2^(ceil(log2 M_F) - 10)            [address-space allocation, depth 1024]
+
+i.e. the synthesized address decoder allocates a power-of-two address space.  We
+reproduce that formula exactly (``bram_count``) plus a generic width-aware variant
+(``bram_count_packed``) for the paper's other configurations (16384x1 ... 512x36).
+
+The TPU-side analogue (``vmem_cost``) reports the bytes a Pallas kernel must hold
+resident in VMEM: packed table + selector metadata, rounded up to 512-byte sublane
+multiples, against a configurable VMEM budget.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+# BRAM18 capacity by entry width (Xilinx 7-series, UG473): width -> depth
+BRAM18_DEPTH = {1: 16384, 2: 8192, 4: 4096, 9: 2048, 18: 1024, 36: 512}
+
+# The paper treats 32-bit entries as depth-1024 (width rounded up to 36 would give 512;
+# the text explicitly states 1024 entries of 32 bits and uses the 2^(ceil..-10) formula).
+PAPER_DEPTH_32BIT = 1024
+
+VMEM_BYTES_V5E = 16 * 1024 * 1024  # per-core VMEM budget used by the packing report
+VMEM_SUBLANE_BYTES = 512
+
+
+def bram_count(footprint: int, width_bits: int = 32) -> int:
+    """Paper formula: power-of-two address-space allocation at depth 1024 (32-bit)."""
+    if footprint <= 0:
+        raise ValueError("footprint must be positive")
+    if width_bits != 32:
+        return bram_count_packed(footprint, width_bits)
+    addr_bits = max(10, math.ceil(math.log2(footprint)))
+    return 2 ** (addr_bits - 10)
+
+
+def bram_count_packed(footprint: int, width_bits: int) -> int:
+    """Generic ceil-packing across BRAM18 width configurations (no address rounding)."""
+    if footprint <= 0:
+        raise ValueError("footprint must be positive")
+    widths = sorted(BRAM18_DEPTH)
+    for w in widths:
+        if width_bits <= w:
+            return math.ceil(footprint / BRAM18_DEPTH[w])
+    # wider than 36 bits: split into 36-bit slices
+    slices = math.ceil(width_bits / 36)
+    return slices * math.ceil(footprint / BRAM18_DEPTH[36])
+
+
+@dataclass(frozen=True)
+class VmemCost:
+    table_bytes: int
+    meta_bytes: int
+    padded_bytes: int
+    budget_bytes: int
+
+    @property
+    def fraction(self) -> float:
+        return self.padded_bytes / self.budget_bytes
+
+
+def vmem_cost(
+    footprint: int,
+    n_intervals: int,
+    dtype_bytes: int = 4,
+    budget_bytes: int = VMEM_BYTES_V5E,
+) -> VmemCost:
+    """VMEM residency of a TableSpec inside the Pallas kernel."""
+    table = footprint * dtype_bytes
+    # boundaries (n+1), inv_delta (n), base (n), seg_count (n) as f32/i32 lanes
+    meta = (4 * n_intervals + 1) * 4
+    pad = VMEM_SUBLANE_BYTES
+    padded = math.ceil((table + meta) / pad) * pad
+    return VmemCost(table, meta, padded, budget_bytes)

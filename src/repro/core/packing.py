@@ -1,0 +1,142 @@
+"""Mixed-width quantized table packing — the paper's stated future work
+("we want to explore more efficient packing of BRAMs", Sec. 8) implemented.
+
+BRAM18 primitives reconfigure entry width (1/2/4/9/18/36 bits).  The paper
+always stores 32-bit range values; but once the interval splitter has produced
+sub-intervals, each sub-interval's value RANGE is narrow, so its entries can be
+stored affinely quantized at a much smaller width:
+
+    y_q = round((y - z_j) / s_j)            stored at b_j bits
+    y   ~ z_j + s_j * y_q
+
+Error budget: the interpolation bound gets rho*Ea (the table is built with the
+tightened bound) and quantization gets (1-rho)*Ea; since lerp is a convex
+combination, quantized-endpoint error <= s_j/2, so the minimal width satisfying
+
+    s_j / 2 <= (1 - rho) * Ea,   s_j = (max_j - min_j) / (2^b_j - 1)
+
+is chosen PER SUB-INTERVAL from the width menu.  Total footprint is
+``sum_j kappa_j * b_j`` bits instead of ``32 * sum_j kappa_j``.
+
+Measured (benchmarks/paper_figs.table3_packing): with arbitrary bitfield
+packing, +30-37 % per-entry savings at the paper's Ea=9.5e-7 (21-23 required
+bits) and +52-59 % at the framework's activation Ea=1e-4 (13-16 bits); combined
+with interval splitting: 69-92 % total vs the 32-bit Reference table.  With the
+PHYSICAL BRAM18 menu (1/2/4/9/18/36) the paper-Ea case rounds UP to 36 bits on
+high-resolution sub-intervals — i.e. the paper's future work only pays off on
+FPGAs below Ea~1e-5 resolution or with bitfield packing across BRAM ports; an
+honest negative-at-tiny-Ea result.
+
+The runtime analogue stores int16/int8 entries in VMEM with per-sub-interval
+(scale, zero) in the selector metadata — one extra FMA after the gather.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .functions import FunctionSpec, get as get_function
+from .table import TableSpec, build_table
+
+BRAM_WIDTHS = (1, 2, 4, 9, 18, 36)  # physical BRAM18 entry widths
+INT_WIDTHS = (4, 8, 16, 32)  # TPU-friendly storage menu
+PACKED_WIDTHS = tuple(range(1, 37))  # arbitrary-width bitfield packing
+
+
+@dataclass(frozen=True)
+class QuantizedTableSpec:
+    """A TableSpec whose values are stored affinely quantized per sub-interval."""
+
+    base: TableSpec
+    q_values: np.ndarray  # (M_F,) int64 codes
+    scale: np.ndarray  # (n,) f64 per sub-interval
+    zero: np.ndarray  # (n,) f64 per sub-interval
+    bits: np.ndarray  # (n,) i64 chosen width per sub-interval
+    rho: float
+
+    @property
+    def footprint_bits(self) -> int:
+        counts = np.diff(np.concatenate([self.base.base,
+                                         [self.base.footprint]]))
+        return int(np.sum(counts * self.bits))
+
+    @property
+    def footprint_bits_fp32(self) -> int:
+        return 32 * self.base.footprint
+
+    @property
+    def bit_reduction(self) -> float:
+        return 1.0 - self.footprint_bits / self.footprint_bits_fp32
+
+    def eval(self, x: np.ndarray) -> np.ndarray:
+        """Dequantize-on-read evaluation (the hardware path)."""
+        ts = self.base
+        x = np.asarray(x, dtype=np.float64)
+        j = np.clip(np.searchsorted(ts.boundaries, x, side="right") - 1,
+                    0, ts.n_intervals - 1)
+        p_j = ts.boundaries[j]
+        i = np.clip(np.floor((x - p_j) * ts.inv_delta[j]).astype(np.int64),
+                    0, ts.seg_count[j] - 1)
+        a = ts.base[j] + i
+        y0 = self.zero[j] + self.scale[j] * self.q_values[a]
+        y1 = self.zero[j] + self.scale[j] * self.q_values[a + 1]
+        t = np.clip((x - (p_j + i * ts.delta[j])) * ts.inv_delta[j], 0.0, 1.0)
+        return y0 + t * (y1 - y0)
+
+    def max_error_on_grid(self, fn: Optional[FunctionSpec] = None,
+                          n: int = 100_001) -> float:
+        fn = fn or get_function(self.base.name)
+        xs = np.linspace(self.base.lo, self.base.hi, n)
+        xs = xs[xs < self.base.hi]
+        return float(np.max(np.abs(self.eval(xs) - np.asarray(fn.f(xs)))))
+
+
+def _min_width(value_range: float, tol: float, menu: Tuple[int, ...]) -> int:
+    """Smallest menu width b with (range / (2^b - 1)) / 2 <= tol."""
+    for b in menu:
+        if b >= 63:
+            return b
+        if value_range <= 2.0 * tol * (2**b - 1):
+            return b
+    return menu[-1]
+
+
+def quantize_table(
+    fn: FunctionSpec | str,
+    e_a: float,
+    lo: Optional[float] = None,
+    hi: Optional[float] = None,
+    algorithm: str = "hierarchical",
+    omega: float = 0.3,
+    *,
+    rho: float = 0.8,
+    width_menu: Tuple[int, ...] = PACKED_WIDTHS,
+) -> QuantizedTableSpec:
+    """Build an interval-split table at rho*Ea and quantize each sub-interval's
+    entries at the minimal width keeping total error <= Ea."""
+    if not (0.0 < rho < 1.0):
+        raise ValueError("rho must be in (0, 1)")
+    fn = get_function(fn) if isinstance(fn, str) else fn
+    ts = build_table(fn, rho * e_a, lo, hi, algorithm=algorithm, omega=omega)
+    tol = (1.0 - rho) * e_a
+    counts = np.diff(np.concatenate([ts.base, [ts.footprint]]))
+    q = np.zeros(ts.footprint, dtype=np.int64)
+    scale = np.zeros(ts.n_intervals)
+    zero = np.zeros(ts.n_intervals)
+    bits = np.zeros(ts.n_intervals, dtype=np.int64)
+    for jj in range(ts.n_intervals):
+        s0, s1 = int(ts.base[jj]), int(ts.base[jj] + counts[jj])
+        vals = ts.values[s0:s1]
+        vmin, vmax = float(vals.min()), float(vals.max())
+        b = _min_width(vmax - vmin, tol, width_menu)
+        levels = 2**b - 1
+        s = (vmax - vmin) / levels if vmax > vmin else 1.0
+        codes = np.clip(np.rint((vals - vmin) / s), 0, levels)
+        q[s0:s1] = codes.astype(np.int64)
+        scale[jj], zero[jj], bits[jj] = s, vmin, b
+    return QuantizedTableSpec(base=ts, q_values=q, scale=scale, zero=zero,
+                              bits=bits, rho=rho)

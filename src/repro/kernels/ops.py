@@ -1,0 +1,19 @@
+"""jit'd public wrappers around the Pallas kernels."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.approx.jax_table import JaxTable
+
+from .table_lookup import table_lookup_pallas
+
+
+def table_lookup(jt: JaxTable, x: jax.Array, *, extrapolate: bool = False) -> jax.Array:
+    """Fused interval-select + lookup + lerp (Fig. 7) over a tensor.
+
+    Dispatches to the Pallas kernel (interpret mode off-TPU).  Differentiability is
+    provided one level up by ``repro.approx.make_table_fn`` (custom_jvp with the
+    table slope), matching the hardware's piecewise-linear semantics.
+    """
+    return table_lookup_pallas(jt, x, extrapolate=extrapolate)

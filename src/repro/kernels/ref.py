@@ -1,0 +1,12 @@
+"""Pure-jnp oracles for every kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.approx.jax_table import JaxTable, eval_table_ref
+
+
+def table_lookup_ref(jt: JaxTable, x: jax.Array, *, extrapolate: bool = False) -> jax.Array:
+    """Oracle for ``table_lookup``: identical math, plain jnp ops."""
+    return eval_table_ref(jt, x, extrapolate=extrapolate)

@@ -1,0 +1,385 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
+cell on the production mesh without allocating real data.
+
+For each cell we jit the REAL step function (train_step with AdamW, or
+prefill/decode serve steps with their caches), lower against ShapeDtypeStruct
+inputs, compile for the 512-host-device SPMD target, and record:
+  * memory_analysis()  — per-device argument/output/temp/code bytes (fits-check)
+  * cost_analysis()    — HLO FLOPs + bytes accessed (roofline numerator)
+  * per-collective-type bytes parsed from the compiled HLO (collective term)
+
+Results append to a JSON cache (benchmarks/results/dryrun.json) keyed by
+(arch, shape, mesh, variant) so re-runs are incremental.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multipod
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import data_config_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, get_config, input_specs, shapes_for
+from repro.models.registry import ARCH_IDS
+from repro.optim import adamw
+from repro.parallel.cache_specs import cache_pspecs
+from repro.parallel.params import param_pspecs, shardings_from_specs, zero1_pspecs
+from repro.parallel.sharding import default_rules, use_sharding
+from repro.train.loop import make_train_step
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "results", "dryrun.json")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Sum byte sizes of every typed shape in an HLO result signature."""
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<sig>\([^)]*\)|[\w\[\]{},]+(?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-type output bytes of the per-device program.
+
+    Convention: we count each op's RESULT bytes (for all-reduce/permute result ==
+    operand; for all-gather the result is the gathered tensor; for reduce-scatter
+    the scattered shard).  Tuple results (grouped reduces) sum their elements;
+    ``-start`` variants are counted, ``-done`` skipped.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["counts"] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        out[op] += _shape_bytes(m.group("sig"))
+        out["counts"][op] += 1
+    return out
+
+
+def _spec_tree_to_json(tree):
+    return jax.tree.map(lambda s: str(s), tree,
+                        is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                        or type(x).__name__ == "PartitionSpec")
+
+
+def _batch_axes(rules, mesh, batch_size: int):
+    """Batch-dim sharding axes, or None when the batch doesn't divide (e.g. the
+    long_500k single-sequence decode replicates its batch dim)."""
+    ax = rules.get("batch")
+    if ax is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = int(np.prod([sizes[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
+    return ax if batch_size % total == 0 else None
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             variant: str = "base") -> Dict[str, Any]:
+    cfg = get_config(arch_id)
+    shape = {s.name: s for s in shapes_for(cfg)}.get(shape_name)
+    if shape is None:
+        return {"status": "skipped",
+                "reason": f"{shape_name} not applicable to {arch_id} "
+                          "(see DESIGN.md §5)"}
+    cfg = apply_variant(cfg, variant)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(mesh)
+    t0 = time.time()
+
+    from repro.parallel.params import fsdp_pspecs
+
+    if variant in ("fsdp", "ddp"):
+        # fsdp: ZeRO-3 flat param sharding; ddp: params replicated (small nets).
+        # Both: batch over the whole mesh, no tensor-parallel activation sharding
+        rules = dict(rules)
+        full = tuple(mesh.axis_names)
+        rules.update({"batch": full, "model": None, "expert": None,
+                      "vocab": None, "heads": None, "ff": None})
+
+    with use_sharding(mesh, rules):
+        abstract_params = model.abstract_params()
+        if variant == "fsdp":
+            pspecs = fsdp_pspecs(abstract_params, mesh)
+        elif variant == "ddp":
+            from jax.sharding import PartitionSpec as P0
+
+            pspecs = jax.tree.map(lambda _: P0(), abstract_params)
+        else:
+            pspecs = param_pspecs(abstract_params, mesh, rules)
+
+        if shape.kind == "train":
+            opt_cfg = adamw.AdamWConfig()
+            # default accumulation caps the live microbatch at ~8k tokens/device
+            # (scan-carried residuals are the dominant activation term)
+            dsize = int(np.prod([s for n, s in zip(
+                mesh.axis_names, mesh.devices.shape) if n != "model"]))
+            tokens_dev = shape.global_batch * shape.seq_len / max(1, dsize)
+            auto_accum = max(1, int(tokens_dev // 4096))
+            while shape.global_batch % (auto_accum * 1) != 0 or \
+                    (shape.global_batch // auto_accum) % 1 != 0:
+                auto_accum -= 1
+            while auto_accum > 1 and shape.global_batch % auto_accum != 0:
+                auto_accum -= 1
+            accum = {"accum1": 1, "accum4": 4, "accum8": 8}.get(variant, auto_accum)
+            accum = max(1, accum)
+            if variant == "fsdp":
+                mspecs = pspecs  # already fully sharded
+                step_fn = make_train_step(model, opt_cfg, accum=accum)
+                param_state_specs = pspecs
+            elif variant == "ddp":
+                # moments ZeRO-1-sharded over the flat mesh, params replicated
+                mspecs = zero1_pspecs(abstract_params, mesh,
+                                      {**rules, "batch": tuple(mesh.axis_names)})
+                step_fn = make_train_step(model, opt_cfg, accum=accum)
+                param_state_specs = pspecs
+            else:
+                # WUS: f32 master fully 2D-sharded; bf16 TP work copy per step
+                mspecs = zero1_pspecs(abstract_params, mesh, rules)
+                work_sh = shardings_from_specs(mesh, pspecs)
+                master_sh = shardings_from_specs(mesh, mspecs)
+                step_fn = make_train_step(model, opt_cfg, accum=accum,
+                                          work_shardings=work_sh,
+                                          master_shardings=master_sh)
+                param_state_specs = mspecs
+            from jax.sharding import PartitionSpec as P
+
+            state_specs = {"params": param_state_specs,
+                           "opt": {"m": mspecs, "v": mspecs, "count": P()},
+                           "step": P()}
+            state_sh = shardings_from_specs(mesh, state_specs)
+            batch_abstract = input_specs(cfg, shape)
+            bax = _batch_axes(rules, mesh, shape.global_batch)
+            batch_sh = shardings_from_specs(
+                mesh, jax.tree.map(lambda _: P(bax), batch_abstract))
+            abstract_state = {
+                "params": abstract_params,
+                "opt": {"m": abstract_params_f32(abstract_params),
+                        "v": abstract_params_f32(abstract_params),
+                        "count": jax.ShapeDtypeStruct((), jnp.int32)},
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(abstract_state, batch_abstract)
+        elif shape.kind == "prefill":
+            # serving reads bf16 params (deployment norm; halves weight traffic)
+            abstract_params = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+                if l.dtype == jnp.float32 else l, abstract_params)
+            cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+            cspecs = cache_pspecs(cache_abs, mesh, rules)
+            cache_sh = shardings_from_specs(mesh, cspecs)
+            param_sh = shardings_from_specs(mesh, pspecs)
+            batch_abstract = input_specs(cfg, shape)
+            from jax.sharding import PartitionSpec as P
+
+            bax = _batch_axes(rules, mesh, shape.global_batch)
+            batch_sh = shardings_from_specs(
+                mesh, jax.tree.map(lambda _: P(bax), batch_abstract))
+
+            def prefill_step(params, batch, cache):
+                return model.prefill(params, batch, cache)
+
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(param_sh, batch_sh, cache_sh),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(abstract_params, batch_abstract, cache_abs)
+        else:  # decode
+            abstract_params = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+                if l.dtype == jnp.float32 else l, abstract_params)
+            cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+            cspecs = cache_pspecs(cache_abs, mesh, rules)
+            cache_sh = shardings_from_specs(mesh, cspecs)
+            param_sh = shardings_from_specs(mesh, pspecs)
+            from jax.sharding import PartitionSpec as P
+
+            io = input_specs(cfg, shape)
+            bax = _batch_axes(rules, mesh, shape.global_batch)
+            tok_sh = shardings_from_specs(mesh, P(bax, None))
+            pos_sh = shardings_from_specs(mesh, P())
+
+            def serve_step(params, tok, pos, cache):
+                return model.decode_step(params, tok, pos, cache)
+
+            jitted = jax.jit(serve_step,
+                             in_shardings=(param_sh, tok_sh, pos_sh, cache_sh),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(3,))
+            lowered = jitted.lower(abstract_params, io["tok"], io["pos"], cache_abs)
+
+        compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    try:
+        mem = compiled.memory_analysis()
+        mem_fields = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:
+        mem_fields = {"error": repr(e)}
+    try:
+        cost = compiled.cost_analysis() or {}
+    except Exception:
+        cost = {}
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+    n_chips = int(np.prod(mesh.devices.shape))
+
+    record = {
+        "status": "ok",
+        "compile_s": round(compile_s, 1),
+        "n_chips": n_chips,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "memory": mem_fields,
+        "flops_per_device": float(cost.get("flops", -1)),
+        "bytes_per_device": float(cost.get("bytes accessed", -1)),
+        "collectives": colls,
+        "params": int(cfg.param_count()),
+        "active_params": int(cfg.active_param_count()),
+        "tokens": int(shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                            else 1)),
+        "kind": shape.kind,
+        "variant": variant,
+    }
+    return record
+
+
+def abstract_params_f32(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), tree)
+
+
+def apply_variant(cfg, variant: str):
+    """Perf-iteration variants (see EXPERIMENTS.md §Perf)."""
+    if variant in ("base", "fsdp", "ddp", "accum4", "accum8"):
+        return cfg
+    if variant == "exact":  # paper-ablation: exact transcendentals
+        from repro.approx import ApproxConfig
+
+        return cfg.replace(approx=ApproxConfig(mode="exact"))
+    if variant == "no_remat":
+        return cfg.replace(remat=False)
+    if variant == "cf10":  # MoE capacity factor 1.0 (20% less dispatch traffic)
+        import dataclasses
+
+        return cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    if variant == "limit4":  # device-limited routing: <=4 of 16 EP destinations
+        import dataclasses
+
+        return cfg.replace(moe=dataclasses.replace(
+            cfg.moe, device_groups=16, max_groups=4, capacity_factor=1.0))
+    raise KeyError(variant)
+
+
+def load_results() -> Dict[str, Any]:
+    path = os.path.abspath(RESULTS_PATH)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(results: Dict[str, Any]) -> None:
+    path = os.path.abspath(RESULTS_PATH)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multipod", "both"])
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch in (None, "all")) else [args.arch]
+    meshes = {"single": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    results = load_results()
+
+    for arch_id in archs:
+        cfg = get_config(arch_id)
+        shapes = [s.name for s in shapes_for(cfg)]
+        if args.shape and args.shape != "all":
+            shapes = [args.shape]
+        for shape_name in shapes:
+            for mp in meshes:
+                key = f"{arch_id}|{shape_name}|{'2x16x16' if mp else '16x16'}|{args.variant}"
+                if key in results and results[key].get("status") == "ok" \
+                        and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[run] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch_id, shape_name, mp, args.variant)
+                except Exception as e:  # record failures — they are bugs to fix
+                    rec = {"status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                # merge-fresh before save: concurrent sweeps must not clobber
+                results = load_results()
+                results[key] = rec
+                save_results(results)
+                print(f"   -> {rec.get('status')} "
+                      f"({rec.get('compile_s', '-')}s, "
+                      f"flops/dev={rec.get('flops_per_device', '-')})", flush=True)
+
+
+if __name__ == "__main__":
+    main()

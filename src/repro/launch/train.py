@@ -1,0 +1,80 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b --reduced \\
+      --steps 200 --batch 8 --seq 128
+
+Full-size runs use the production mesh (requires real TPU devices); --reduced
+shrinks the config for CPU-scale end-to-end runs (the quickstart path).  On a
+real multi-host cluster this same entry point runs per host after
+``jax.distributed.initialize()`` (env-driven; no code changes).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.models import ShapeSpec, build_model, get_config
+from repro.optim import adamw
+from repro.train.loop import TrainConfig, run
+
+
+def reduced_config(cfg):
+    from tests.test_archs import reduced  # single source of truth for shrink rules
+
+    return reduced(cfg.name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true",
+                    help="family-preserving shrink for CPU-scale runs")
+    ap.add_argument("--mesh", choices=["none", "debug", "prod", "multipod"],
+                    default="none")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        import sys, os
+
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                        "..", "..", ".."))
+        cfg = reduced_config(cfg)
+    model = build_model(cfg)
+
+    mesh = None
+    if args.mesh == "debug":
+        from repro.launch.mesh import make_debug_mesh
+
+        n = len(jax.devices())
+        mesh = make_debug_mesh(max(1, n // 2), min(2, n))
+    elif args.mesh in ("prod", "multipod"):
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+
+    shape = ShapeSpec("cli", seq_len=args.seq, global_batch=args.batch,
+                      kind="train")
+    tc = TrainConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        accum=args.accum,
+        opt=adamw.AdamWConfig(lr=args.lr, warmup_steps=max(1, args.steps // 20),
+                              total_steps=args.steps),
+    )
+    out = run(model, shape, tc, mesh=mesh)
+    print(f"done: step={out['final_step']} "
+          f"loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
+          f"stragglers={out['stragglers']} preempted={out['preempted']}")
+
+
+if __name__ == "__main__":
+    main()

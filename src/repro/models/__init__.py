@@ -1,0 +1,36 @@
+"""repro.models — the model zoo: configs, families, factory."""
+
+from .config import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    ArchConfig,
+    AttnConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeSpec,
+    shapes_for,
+)
+from .registry import ARCH_IDS, build_model, get_config, input_specs
+
+__all__ = [
+    "ALL_SHAPES",
+    "ARCH_IDS",
+    "ArchConfig",
+    "AttnConfig",
+    "DECODE_32K",
+    "LONG_500K",
+    "MoEConfig",
+    "PREFILL_32K",
+    "SHAPES_BY_NAME",
+    "SSMConfig",
+    "ShapeSpec",
+    "TRAIN_4K",
+    "build_model",
+    "get_config",
+    "input_specs",
+    "shapes_for",
+]

@@ -1,0 +1,206 @@
+"""Attention: GQA with RoPE, pure-JAX flash (two-level chunked softmax), sliding
+windows, and KV caches (full-length or ring-buffer for local layers).
+
+Why pure-JAX flash and not a Pallas kernel: the multi-pod dry-run must
+``.lower().compile()`` on a CPU host for a TPU-sized mesh; a Mosaic custom-call
+cannot compile there, while this lax.scan formulation fuses well under XLA:TPU and
+keeps peak memory at O(q_chunk * kv_chunk) per head — required for the 32k prefill
+shapes.  The paper's kernels (table lookup) remain Pallas; attention is substrate.
+
+GQA never materializes repeated KV: einsums carry a (groups, q_per_kv) axis.
+Shapes: q (B, S, G, Qg, D); k,v (B, T, G, D).
+
+API split for the three execution modes:
+  project_qkv()   — fused projections + qk-norm + RoPE
+  attention_out() — flash + output projection
+  train/prefill: attend within the projected sequence; prefill also inserts into
+  the cache. decode: insert this step's k/v into the ring buffer FIRST, then attend
+  against the buffer with its per-slot absolute positions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, apply_rope, init_linear, linear
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key, d_model: int, geom, qk_norm: bool = False,
+                   dtype=jnp.float32) -> Params:
+    """Weights use the *normalized* geometry (DESIGN.md §6): q/o projections carry
+    ``h_eff`` padded heads (masked in the forward — function-preserving); k/v stay
+    at the architecture's logical ``g_log`` heads (GQA ties are parameter-exact,
+    replication happens on activations)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(kq, d_model, (geom.h_eff, geom.d_head), dtype=dtype),
+        "wk": init_linear(kk, d_model, (geom.g_log, geom.d_head), dtype=dtype),
+        "wv": init_linear(kv, d_model, (geom.g_log, geom.d_head), dtype=dtype),
+        "wo": {"w": jax.random.normal(
+            ko, (geom.h_eff, geom.d_head, d_model), dtype) * 0.02},
+    }
+    if qk_norm:
+        p["qn"] = {"g": jnp.ones((geom.d_head,), dtype)}
+        p["kn"] = {"g": jnp.ones((geom.d_head,), dtype)}
+    return p
+
+
+def _headnorm(g, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def head_mask(geom) -> jax.Array:
+    """(g_eff, q_per_group) 1/0 mask of REAL heads in the normalized layout."""
+    import numpy as np
+
+    if geom.g_zero_pad:
+        m = np.zeros((geom.g_eff, geom.q_per_group), np.float32)
+        m[: geom.g_log] = 1.0
+        return jnp.asarray(m)
+    per_group = geom.h_eff // geom.g_log
+    qg_real = geom.h_log // geom.g_log
+    per_rep = per_group // geom.repeat
+    mg = np.concatenate([np.ones(qg_real, np.float32),
+                         np.zeros(per_group - qg_real, np.float32)])
+    m = np.tile(mg.reshape(1, geom.repeat, per_rep), (geom.g_log, 1, 1))
+    return jnp.asarray(m.reshape(geom.g_eff, per_rep))
+
+
+def project_qkv(p: Params, x: jax.Array, positions: Optional[jax.Array], *,
+                geom, rope_theta: float):
+    """x: (B,S,d) -> q (B,S,g_eff,Qg,D), k/v (B,S,g_eff,D) in normalized layout.
+    positions=None or rope_theta==0 skips RoPE (whisper-style absolute pos)."""
+    B, S, _ = x.shape
+    D = geom.d_head
+    q = linear(p["wq"], x, "bsd,dhe->bshe")  # (B,S,h_eff,D)
+    k = linear(p["wk"], x, "bsd,dge->bsge")  # (B,S,g_log,D)
+    v = linear(p["wv"], x, "bsd,dge->bsge")
+    if "qn" in p:
+        q = _headnorm(p["qn"]["g"], q)
+        k = _headnorm(p["kn"]["g"], k)
+    if positions is not None and rope_theta > 0:
+        q = apply_rope(q, positions[None, :], rope_theta)
+        k = apply_rope(k, positions[None, :], rope_theta)
+    # normalize kv to g_eff groups on the ACTIVATION (params stay logical)
+    if geom.repeat > 1:
+        k = jnp.repeat(k, geom.repeat, axis=2)
+        v = jnp.repeat(v, geom.repeat, axis=2)
+    elif geom.g_zero_pad:
+        zpad = ((0, 0), (0, 0), (0, geom.g_zero_pad), (0, 0))
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+    q = q.reshape(B, S, geom.g_eff, geom.q_per_group, D)
+    return q, k, v
+
+
+def _flash_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                 kv_chunk: int, scale: float):
+    """Running-softmax attention for one q block over all kv chunks.
+
+    q: (B, Sq, G, Qg, D); k/v: (B, T, G, D); positions: (Sq,), (T,).
+    Returns (B, Sq, G, Qg, D).
+    """
+    B, Sq, G, Qg, D = q.shape
+    T = k.shape[1]
+    kv_chunk = min(kv_chunk, T)
+    n_chunks = -(-T // kv_chunk)
+    Tp = n_chunks * kv_chunk
+    if Tp != T:
+        pad = Tp - T
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+    k = jnp.moveaxis(k.reshape(B, n_chunks, kv_chunk, G, D), 1, 0)
+    v = jnp.moveaxis(v.reshape(B, n_chunks, kv_chunk, G, D), 1, 0)
+    k_pos = k_pos.reshape(n_chunks, kv_chunk)
+
+    qf = (q * scale).astype(jnp.float32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, kp = xs
+        s = jnp.einsum("bsgqd,btgd->bsgqt", qf, kc.astype(jnp.float32))
+        valid = kp[None, :] >= 0  # empty slots masked
+        if causal:
+            valid = valid & (kp[None, :] <= q_pos[:, None])
+        if window > 0:
+            valid = valid & (kp[None, :] > q_pos[:, None] - window)
+        s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bsgqt,btgd->bsgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, G, Qg), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, G, Qg), jnp.float32)
+    a0 = jnp.zeros((B, Sq, G, Qg, D), jnp.float32)
+    if n_chunks == 1:
+        (m, l, acc), _ = step((m0, l0, a0), (k[0], v[0], k_pos[0]))
+    else:
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (k, v, k_pos))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True, window: int = 0,
+                    q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
+    """q: (B, S, G, Qg, D); k/v: (B, T, G, D). Positions are absolute token indices;
+    negative k_pos marks empty cache slots."""
+    B, S, G, Qg, D = q.shape
+    scale = D ** -0.5
+    q_chunk = min(q_chunk, S)
+    pad = q_chunk * (-(-S // q_chunk)) - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=2_000_000_000)
+    n_q = q.shape[1] // q_chunk
+    qs = q.reshape(B, n_q, q_chunk, G, Qg, D)
+    qp = q_pos.reshape(n_q, q_chunk)
+
+    inner = functools.partial(
+        _flash_inner, k=k, v=v, k_pos=k_pos, causal=causal, window=window,
+        kv_chunk=kv_chunk, scale=scale)
+    if n_q == 1:
+        out = inner(qs[:, 0], q_pos=qp[0])[:, None]
+    else:
+        out = jax.lax.map(lambda xs: inner(xs[0], q_pos=xs[1]),
+                          (jnp.moveaxis(qs, 1, 0), qp))
+        out = jnp.moveaxis(out, 0, 1)
+    return out.reshape(B, n_q * q_chunk, G, Qg, D)[:, :S]
+
+
+def attention_out(p: Params, attended: jax.Array, geom=None) -> jax.Array:
+    """(B, S, G, Qg, D) -> (B, S, d_model) via the output projection.  Padded
+    heads are masked here, which also kills their gradients (pad params never
+    train — the normalized model is exactly the logical one)."""
+    B, S, G, Qg, D = attended.shape
+    if geom is not None and geom.is_padded:
+        attended = attended * head_mask(geom)[None, None, :, :, None].astype(
+            attended.dtype)
+    wo = p["wo"]["w"].astype(attended.dtype).reshape(G, Qg, D, -1)
+    return jnp.einsum("bsgqd,gqdm->bsm", attended, wo)
+
+
+def cache_insert(k_buf, v_buf, pos_buf, k_new, v_new, positions):
+    """Insert S new rope'd entries into a ring/linear buffer.
+
+    k_buf/v_buf: (B, W, G, D); pos_buf: (W,) int32 (-1 = empty slot).
+    positions: (S,) absolute; slot = position % W.  Callers must pass S <= W
+    (prefill truncates to the last W tokens first).
+    """
+    W = k_buf.shape[1]
+    slots = (positions % W).astype(jnp.int32)
+    k_buf = k_buf.at[:, slots].set(k_new.astype(k_buf.dtype))
+    v_buf = v_buf.at[:, slots].set(v_new.astype(v_buf.dtype))
+    pos_buf = pos_buf.at[slots].set(positions.astype(jnp.int32))
+    return k_buf, v_buf, pos_buf

@@ -1,0 +1,100 @@
+"""Shared building blocks: initializers, norms, rotary embeddings, projections.
+
+Models are plain pytrees of arrays + pure functions (no flax dependency): ``init_*``
+builds parameter subtrees from a PRNG key, ``apply``-style functions consume them.
+Stacked (scan-over-layers) parameters are produced by vmapping the initializers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def normal_init(key, shape, scale: float, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    return (scale / np.sqrt(max(1, fan_in))) * jax.random.normal(key, shape, dtype)
+
+
+def init_linear(key, d_in: int, d_out, *, scale: float = 1.0, dtype=jnp.float32):
+    """Weight of shape (d_in, *d_out) — d_out may be a tuple for fused heads."""
+    shape = (d_in,) + (d_out if isinstance(d_out, tuple) else (d_out,))
+    return {"w": normal_init(key, shape, scale, dtype)}
+
+
+def linear(p: Params, x: jax.Array, dims: str = "...d,df->...f") -> jax.Array:
+    return jnp.einsum(dims, x, p["w"].astype(x.dtype))
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0).astype(dtype)
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Project to vocab logits in f32 (loss stability)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+# ------------------------------- rotary ---------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == ang.ndim + 1:  # head axis present between S and D
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype=jnp.float32)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x

@@ -1,0 +1,146 @@
+"""Feed-forward blocks: gated-linear-unit MLP and fine-grained MoE.
+
+The MoE uses sort-based capacity dispatch (MegaBlocks-style, no custom kernel):
+top-k routing -> stable sort of (token, expert) slots by expert -> scatter into a
+static (E, C, d) buffer -> grouped einsum -> weighted scatter-add back.  Under pjit
+the (E, ...) dims shard over the 'model' mesh axis (expert parallelism) and XLA
+inserts the dispatch collectives; the shard_map all-to-all variant is a §Perf
+iteration (see EXPERIMENTS.md).
+
+All nonlinearities route through the paper's table backend via ``act_fn``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, init_linear, linear
+
+
+def init_glu(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": init_linear(k1, d_model, d_ff, dtype=dtype),  # gate branch
+        "wu": init_linear(k2, d_model, d_ff, dtype=dtype),  # linear branch
+        "wd": init_linear(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def glu(p: Params, x: jax.Array, act: Callable) -> jax.Array:
+    return linear(p["wd"], act(linear(p["wi"], x)) * linear(p["wu"], x))
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    """Plain 2-matrix MLP (whisper/starcoder style)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": init_linear(k1, d_model, d_ff, dtype=dtype),
+        "wd": init_linear(k2, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array, act: Callable) -> jax.Array:
+    return linear(p["wd"], act(linear(p["wi"], x)))
+
+
+# ----------------------------------- MoE --------------------------------------
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, n_shared: int,
+             dtype=jnp.float32) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    p = {
+        "router": {"w": jax.random.normal(kr, (d_model, n_experts), jnp.float32) * 0.02},
+        "experts": {
+            "wi": jax.random.normal(ke, (n_experts, d_model, d_ff), dtype) * 0.02,
+            "wu": jax.random.normal(
+                jax.random.fold_in(ke, 1), (n_experts, d_model, d_ff), dtype) * 0.02,
+            "wd": jax.random.normal(
+                jax.random.fold_in(ke, 2), (n_experts, d_ff, d_model), dtype) * 0.02,
+        },
+    }
+    if n_shared:
+        p["shared"] = init_glu(ks, d_model, n_shared * d_ff, dtype)
+    return p
+
+
+def moe(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    act: Callable,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    softmax_fn=None,
+    device_groups: int = 0,
+    max_groups: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).  Dropped tokens (over capacity) fall back to the
+    shared-expert path (their routed contribution is zero).
+
+    ``device_groups``/``max_groups`` enable DeepSeek-V3-style device-limited
+    routing: experts are grouped into ``device_groups`` contiguous EP shards and
+    each token may only route into its ``max_groups`` best shards (by max expert
+    affinity) — bounding the all-to-all fan-out to max_groups destinations.
+    Semantics change (a routing restriction) but this is standard practice for
+    exactly the collective bound it attacks (EXPERIMENTS.md §Perf)."""
+    B, S, d = x.shape
+    E = p["experts"]["wi"].shape[0]
+    T = B * S
+    xt = x.reshape(T, d)
+
+    # --- routing (f32) ---------------------------------------------------------
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1) if softmax_fn is None else softmax_fn(logits)
+    if device_groups and max_groups and max_groups < device_groups:
+        per = E // device_groups
+        group_score = probs.reshape(T, device_groups, per).max(-1)  # (T, G)
+        _, top_g = jax.lax.top_k(group_score, max_groups)
+        allowed = jnp.zeros((T, device_groups), bool).at[
+            jnp.arange(T)[:, None], top_g].set(True)
+        probs = jnp.where(
+            jnp.repeat(allowed, per, axis=1), probs, 0.0)
+    gate, eidx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (T * top_k)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch ----------------------------------------------------
+    C = int(capacity_factor * T * top_k / E) + 1
+    flat_e = eidx.reshape(-1)  # (T*k,) expert of each slot
+    slot_token = jnp.repeat(jnp.arange(T), top_k)  # token of each slot
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank of each sorted slot within its expert group
+    ranks = jnp.arange(T * top_k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    keep = ranks < C
+    dest = sorted_e * C + ranks  # (T*k,) position in the (E*C) buffer
+    dest = jnp.where(keep, dest, E * C)  # overflow -> scratch row
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    xe = buf.at[dest].set(xt[slot_token[order]].astype(x.dtype))[:-1]
+    xe = xe.reshape(E, C, d)
+
+    # --- grouped expert GLU ------------------------------------------------------
+    we = p["experts"]
+    h = act(jnp.einsum("ecd,edf->ecf", xe, we["wi"].astype(x.dtype))) * jnp.einsum(
+        "ecd,edf->ecf", xe, we["wu"].astype(x.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, we["wd"].astype(x.dtype))  # (E, C, d)
+
+    # --- combine: gather each kept slot's output, weight by gate, sum per token --
+    ye_flat = jnp.concatenate([ye.reshape(E * C, d), jnp.zeros((1, d), ye.dtype)], 0)
+    slot_out = ye_flat[dest]  # (T*k, d) — overflow slots read zeros
+    slot_gate = gate.reshape(-1)[order].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[slot_token[order]].add(
+        slot_out * slot_gate[:, None])
+
+    if "shared" in p:
+        y = y + glu(p["shared"], xt, act)
+    return y.reshape(B, S, d), aux

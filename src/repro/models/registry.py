@@ -1,0 +1,69 @@
+"""Model factory + abstract input specs for every (arch, shape) cell."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ENCDEC, MOE, SSM_HYBRID, VLM as VLM_FAM, XLSTM, ArchConfig, ShapeSpec
+from .transformer import DecoderLM, EncDecLM, HybridLM, VLM, XLSTMLM
+
+ARCH_IDS = (
+    "xlstm-125m",
+    "deepseek-moe-16b",
+    "qwen3-moe-235b-a22b",
+    "stablelm-3b",
+    "yi-34b",
+    "gemma3-12b",
+    "starcoder2-3b",
+    "whisper-small",
+    "zamba2-1.2b",
+    "internvl2-1b",
+)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod_name = arch_id.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def build_model(cfg: ArchConfig):
+    family = cfg.family
+    if family in ("dense", MOE):
+        return DecoderLM(cfg)
+    if family == SSM_HYBRID:
+        return HybridLM(cfg)
+    if family == XLSTM:
+        return XLSTMLM(cfg)
+    if family == ENCDEC:
+        return EncDecLM(cfg)
+    if family == VLM_FAM:
+        return VLM(cfg)
+    raise ValueError(f"unknown family {family!r}")
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for a step's data inputs (no allocation).
+
+    train/prefill: the token batch (+ stub modality inputs).
+    decode: one new token + position (the KV cache is part of the carried state and
+    produced by ``abstract_cache``)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": sd((B, S), i32)}
+        if shape.kind == "train":
+            batch["targets"] = sd((B, S), i32)
+        if cfg.family == ENCDEC:
+            batch["frames"] = sd((B, cfg.enc_len, cfg.d_model), jnp.float32)
+        if cfg.family == VLM_FAM:
+            batch["patches"] = sd((B, cfg.n_vis_tokens, cfg.d_vis), jnp.float32)
+        return batch
+    if shape.kind == "decode":
+        return {"tok": sd((B, 1), i32), "pos": sd((), i32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,187 @@
+"""Mamba2 (SSD) blocks on a chunkwise gated outer-product scan.
+
+Recurrence (per batch, head):   S_t = a_t * S_{t-1} + u_t w_t^T,   y_t = S_t r_t
+with S in R^{P x N}, a_t in (0, 1].  The chunkwise closed form (chunk length L):
+
+    y_i = exp(lA_i) * (S_0 r_i) + sum_{j<=i} exp(lA_i - lA_j) (w_j . r_i) u_j
+    S_L = exp(lA_L) * S_0 + sum_j exp(lA_L - lA_j) u_j w_j^T
+
+where lA is the within-chunk cumulative log-decay.  Peak memory is O(B H L^2) per
+chunk (L = 256 default), so prefill_32k and the 500k decode shapes stay bounded.
+All transcendentals (softplus for dt, exp for the decay) route through the paper's
+table backend.
+
+Projections are kept UNFUSED (separate z/x/B/C/dt weights): the fused layout's
+split points do not align with 'model'-axis shard boundaries and would force
+resharding collectives (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, init_linear, linear, rmsnorm
+
+
+def gated_outer_scan(log_a, u, w, r, s0, chunk: int = 256):
+    """Chunk-parallel scan of S_t = a_t S_{t-1} + u_t w_t^T ; y_t = S_t r_t.
+
+    log_a: (B, H, S); u: (B, H, S, P); w, r: (B, H, S, N); s0: (B, H, P, N).
+    S must be a multiple of ``chunk`` (callers pad).  Returns (y, s_final).
+    """
+    B, H, S, P = u.shape
+    N = w.shape[-1]
+    L = min(chunk, S)
+    n_chunks = S // L
+    la = jnp.moveaxis(log_a.reshape(B, H, n_chunks, L), 2, 0)
+    uc = jnp.moveaxis(u.reshape(B, H, n_chunks, L, P), 2, 0)
+    wc = jnp.moveaxis(w.reshape(B, H, n_chunks, L, N), 2, 0)
+    rc = jnp.moveaxis(r.reshape(B, H, n_chunks, L, N), 2, 0)
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(s, xs):
+        la_, u_, w_, r_ = xs
+        cl = jnp.cumsum(la_, axis=-1)  # within-chunk cumulative log decay
+        y_carry = jnp.exp(cl)[..., None] * jnp.einsum("bhpn,bhln->bhlp", s, r_)
+        gap = cl[..., :, None] - cl[..., None, :]  # (B,H,L,L) i x j
+        t = jnp.where(mask, jnp.exp(jnp.minimum(gap, 0.0)), 0.0)
+        g = jnp.einsum("bhln,bhmn->bhlm", r_, w_)
+        y_intra = jnp.einsum("bhlm,bhmp->bhlp", t * g, u_)
+        decay_to_end = jnp.exp(cl[..., -1:] - cl)
+        s_new = jnp.exp(cl[..., -1])[..., None, None] * s + jnp.einsum(
+            "bhm,bhmp,bhmn->bhpn", decay_to_end, u_, w_)
+        return s_new, y_carry + y_intra
+
+    s_final, y = jax.lax.scan(step, s0, (la, uc, wc, rc))
+    return jnp.moveaxis(y, 0, 2).reshape(B, H, S, P), s_final
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array  # (B, H, P, N) f32
+    conv_x: jax.Array  # (B, K-1, inner)
+    conv_b: jax.Array  # (B, K-1, N)
+    conv_c: jax.Array  # (B, K-1, N)
+
+
+def init_mamba2(key, d_model: int, *, expand: int, head_dim: int, state_dim: int,
+                conv_width: int, dtype=jnp.float32) -> Params:
+    inner = expand * d_model
+    n_heads = inner // head_dim
+    ks = jax.random.split(key, 9)
+    return {
+        "in_z": init_linear(ks[0], d_model, inner, dtype=dtype),
+        "in_x": init_linear(ks[1], d_model, inner, dtype=dtype),
+        "in_b": init_linear(ks[2], d_model, state_dim, dtype=dtype),
+        "in_c": init_linear(ks[3], d_model, state_dim, dtype=dtype),
+        "in_dt": init_linear(ks[4], d_model, n_heads, dtype=dtype),
+        "conv_x": {"w": jax.random.normal(ks[5], (conv_width, inner), dtype) * 0.2},
+        "conv_b": {"w": jax.random.normal(ks[6], (conv_width, state_dim), dtype) * 0.2},
+        "conv_c": {"w": jax.random.normal(ks[7], (conv_width, state_dim), dtype) * 0.2},
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": {"g": jnp.ones((inner,), dtype)},
+        "out": init_linear(ks[8], inner, d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, carry: jax.Array | None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C); carry: (B, K-1, C) or None.
+    Returns (out, new_carry)."""
+    K = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = carry.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :].astype(x.dtype)
+              for i in range(K))
+    return out, xp[:, -(K - 1):]
+
+
+def mamba2_block(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    expand: int,
+    head_dim: int,
+    state_dim: int,
+    conv_width: int,
+    chunk: int,
+    act_silu: Callable,
+    act_softplus: Callable,
+    cache: SSMCache | None = None,
+):
+    """Returns (y, new_cache)."""
+    B, S, d = x.shape
+    inner = expand * d
+    H = inner // head_dim
+    N = state_dim
+
+    z = linear(p["in_z"], x)
+    xin = linear(p["in_x"], x)
+    b = linear(p["in_b"], x)
+    c = linear(p["in_c"], x)
+    dt_raw = linear(p["in_dt"], x)
+
+    cx = cache.conv_x if cache is not None else None
+    cb = cache.conv_b if cache is not None else None
+    cc = cache.conv_c if cache is not None else None
+    xin, ncx = _causal_conv(xin, p["conv_x"]["w"], cx)
+    b, ncb = _causal_conv(b, p["conv_b"]["w"], cb)
+    c, ncc = _causal_conv(c, p["conv_c"]["w"], cc)
+    xin = act_silu(xin)
+    b = act_silu(b)
+    c = act_silu(c)
+
+    dt = act_softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,) negative
+    log_decay = jnp.moveaxis(dt * a, 2, 1)  # (B,H,S) <= 0
+
+    u = jnp.moveaxis(
+        (xin.reshape(B, S, H, head_dim) * dt[..., None]).astype(jnp.float32), 2, 1)
+    w_ = jnp.broadcast_to(b[:, None].astype(jnp.float32), (B, H, S, N))
+    r_ = jnp.broadcast_to(c[:, None].astype(jnp.float32), (B, H, S, N))
+
+    s0 = (cache.state.astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, H, head_dim, N), jnp.float32))
+
+    if S == 1:  # decode fast path: one recurrence step
+        a1 = jnp.exp(log_decay[..., 0])
+        s_final = a1[..., None, None] * s0 + jnp.einsum(
+            "bhp,bhn->bhpn", u[..., 0, :], w_[..., 0, :])
+        y = jnp.einsum("bhpn,bhn->bhp", s_final, r_[..., 0, :])[:, None]  # (B,1,H,P)
+    else:
+        pad = (-S) % chunk
+        if pad:
+            f = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 3))
+            log_decay, u, w_, r_ = f(log_decay), f(u), f(w_), f(r_)
+        y, s_final = gated_outer_scan(log_decay, u, w_, r_, s0, chunk)
+        y = jnp.moveaxis(y[:, :, :S], 1, 2)  # (B,S,H,P)
+
+    y = y + (xin.reshape(B, S, H, head_dim).astype(jnp.float32)
+             * p["d_skip"][None, None, :, None])
+    y = y.reshape(B, S, inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * act_silu(z))
+    out = linear(p["out"], y)
+    new_cache = SSMCache(
+        state=s_final.astype(jnp.float32),
+        conv_x=ncx.astype(jnp.float32), conv_b=ncb.astype(jnp.float32),
+        conv_c=ncc.astype(jnp.float32),
+    )
+    return out, new_cache
+
+
+def init_ssm_cache(batch: int, inner: int, state_dim: int, head_dim: int,
+                   conv_width: int) -> SSMCache:
+    H = inner // head_dim
+    return SSMCache(
+        state=jnp.zeros((batch, H, head_dim, state_dim), jnp.float32),
+        conv_x=jnp.zeros((batch, conv_width - 1, inner), jnp.float32),
+        conv_b=jnp.zeros((batch, conv_width - 1, state_dim), jnp.float32),
+        conv_c=jnp.zeros((batch, conv_width - 1, state_dim), jnp.float32),
+    )

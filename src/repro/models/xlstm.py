@@ -1,0 +1,224 @@
+"""xLSTM blocks: mLSTM (matrix memory, exp input gating) and sLSTM (scalar memory,
+recurrent gates) — arXiv:2405.04517, adapted for chunk-parallel TPU execution.
+
+mLSTM recurrence per (batch, head), state C in R^{DxD}, normalizer n in R^D,
+stabilizer m (scalar):
+
+    m_t = max(logsig(f~_t) + m_{t-1}, i~_t)
+    C_t = exp(logsig(f~)+m_{t-1}-m_t) C_{t-1} + exp(i~_t - m_t) v_t k_t^T
+    n_t = (same decays) n + exp(i~ - m) k
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+The chunkwise closed form tracks per-position running maxima inside each chunk and
+rescales the carry — all exp() arguments are <= 0 so the paper's ``exp_neg`` table
+backend applies directly (the exp-gating IS the xLSTM hot spot; see DESIGN.md §5).
+
+sLSTM keeps true recurrent gates (R h_{t-1}) and is inherently sequential: a
+lax.scan over time with block-diagonal-per-head recurrent weights.  Decode is the
+same scan with S=1.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, init_linear, linear, rmsnorm
+
+
+class MLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, D, D) stabilized matrix memory
+    n: jax.Array  # (B, H, D) stabilized normalizer
+    m: jax.Array  # (B, H) stabilizer (log scale)
+
+
+class SLSTMCache(NamedTuple):
+    h: jax.Array  # (B, d)
+    c: jax.Array  # (B, d)
+    n: jax.Array  # (B, d)
+    m: jax.Array  # (B, d)
+
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": init_linear(ks[0], d_model, d_model, dtype=dtype),
+        "wk": init_linear(ks[1], d_model, d_model, dtype=dtype),
+        "wv": init_linear(ks[2], d_model, d_model, dtype=dtype),
+        "wi": init_linear(ks[3], d_model, n_heads, dtype=dtype),  # input gate (exp)
+        "wf": init_linear(ks[4], d_model, n_heads, dtype=dtype),  # forget gate
+        "wog": init_linear(ks[5], d_model, d_model, dtype=dtype),  # output gate
+        "norm": {"g": jnp.ones((d_model,), dtype)},
+        "wo": init_linear(ks[6], d_model, d_model, dtype=dtype),
+        "f_bias": 3.0 * jnp.ones((n_heads,), jnp.float32),  # forget-open init
+    }
+
+
+def _logsigmoid(x, act_sigmoid):
+    # log sigmoid(x) = -softplus(-x); keep it in terms of the table backend's sigmoid
+    return -jax.nn.softplus(-x)
+
+
+def mlstm_block(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    n_heads: int,
+    act_sigmoid: Callable,
+    act_exp: Callable,  # exp over (-inf, 0] — the exp_neg table
+    cache: MLSTMCache | None = None,
+    chunk: int = 128,
+):
+    B, S, d = x.shape
+    H = n_heads
+    D = d // H
+
+    def split_heads(t):  # (B,S,d) -> (B,H,S,D)
+        return jnp.moveaxis(t.reshape(B, S, H, D), 2, 1)
+
+    q = split_heads(linear(p["wq"], x)).astype(jnp.float32) * (D ** -0.5)
+    k = split_heads(linear(p["wk"], x)).astype(jnp.float32) * (D ** -0.5)
+    v = split_heads(linear(p["wv"], x)).astype(jnp.float32)
+    it = jnp.moveaxis(linear(p["wi"], x), 2, 1).astype(jnp.float32)  # (B,H,S) i~
+    ft = jnp.moveaxis(linear(p["wf"], x), 2, 1).astype(jnp.float32) + p["f_bias"][None, :, None]
+    logf = _logsigmoid(ft, act_sigmoid)  # (B,H,S) <= 0
+
+    if cache is None:
+        c0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = cache.c.astype(jnp.float32), cache.n.astype(jnp.float32), cache.m
+
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        it = jnp.pad(it, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, 0), (0, pad)))
+    Sp = S + pad
+    nch = Sp // L
+
+    def resh(t, feat):  # (B,H,Sp,*) -> chunk-major (nch, B, H, L, *)
+        t = t.reshape(B, H, nch, L, *((feat,) if feat else ()))
+        return jnp.moveaxis(t, 2, 0)
+
+    def step(carry, xs):
+        c, n, m = carry
+        qc, kc, vc, ic, fc = xs
+        cl = jnp.cumsum(fc, axis=-1)  # (B,H,L) cumulative log forget
+        # log-weight of source j at target i: cl_i - cl_j + i~_j  (j <= i)
+        src = ic - cl  # (B,H,L) at j
+        # per-position running stabilizer: m_i = max(m_prev + cl_i, max_{j<=i} cl_i + src_j)
+        run_src = jax.lax.cummax(src, axis=2)
+        m_i = jnp.maximum(m[..., None] + cl, cl + run_src)  # (B,H,L)
+        # carry term
+        carry_w = act_exp(jnp.minimum(m[..., None] + cl - m_i, 0.0))
+        y_carry = carry_w[..., None] * jnp.einsum("bhde,bhle->bhld", c, qc)
+        nq_carry = carry_w * jnp.einsum("bhd,bhld->bhl", n, qc)
+        # intra term: W_ij = cl_i - cl_j + i~_j - m_i
+        gap = cl[..., :, None] - cl[..., None, :] + ic[..., None, :]
+        w_ij = gap - m_i[..., None]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        pw = jnp.where(mask, act_exp(jnp.minimum(w_ij, 0.0)), 0.0)
+        g = jnp.einsum("bhld,bhmd->bhlm", qc, kc)  # q_i . k_j
+        y_intra = jnp.einsum("bhlm,bhmd->bhld", pw * g, vc)
+        nq_intra = jnp.einsum("bhlm,bhlm->bhl", pw, g)
+        h_num = y_carry + y_intra
+        nq = nq_carry + nq_intra
+        denom = jnp.maximum(jnp.abs(nq), act_exp(jnp.minimum(-m_i, 0.0)))
+        h = h_num / jnp.maximum(denom, 1e-30)[..., None]
+        # new carry at chunk end
+        m_new = jnp.maximum(m + cl[..., -1], cl[..., -1] + run_src[..., -1])
+        cw = act_exp(jnp.minimum(m + cl[..., -1] - m_new, 0.0))
+        dj = act_exp(jnp.minimum(cl[..., -1:] - cl + ic - m_new[..., None], 0.0))
+        c_new = cw[..., None, None] * c + jnp.einsum("bhm,bhmd,bhme->bhde", dj, vc, kc)
+        n_new = cw[..., None] * n + jnp.einsum("bhm,bhmd->bhd", dj, kc)
+        return (c_new, n_new, m_new), h
+
+    (cF, nF, mF), hs = jax.lax.scan(
+        step, (c0, n0, m0),
+        (resh(q, D), resh(k, D), resh(v, D), resh(it, 0), resh(logf, 0)),
+    )
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, Sp, D)[:, :, :S]
+    h = jnp.moveaxis(h, 1, 2).reshape(B, S, d).astype(x.dtype)
+    og = act_sigmoid(linear(p["wog"], x))
+    h = rmsnorm(p["norm"], h) * og
+    return linear(p["wo"], h), MLSTMCache(cF, nF, mF)
+
+
+def init_slstm(key, d_model: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 9)
+    mk = lambda i: init_linear(ks[i], d_model, d_model, dtype=dtype)
+    return {
+        "wz": mk(0), "wi": mk(1), "wf": mk(2), "wo": mk(3),
+        "rz": mk(4), "ri": mk(5), "rf": mk(6), "ro": mk(7),
+        "f_bias": 3.0 * jnp.ones((d_model,), jnp.float32),
+        "norm": {"g": jnp.ones((d_model,), dtype)},
+        "wd": init_linear(ks[8], d_model, d_model, dtype=dtype),
+    }
+
+
+def slstm_block(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    act_sigmoid: Callable,
+    act_tanh: Callable,
+    act_exp: Callable,
+    cache: SLSTMCache | None = None,
+):
+    B, S, d = x.shape
+    if cache is None:
+        cache = init_slstm_cache(B, d)
+    zx = linear(p["wz"], x).astype(jnp.float32)
+    ix = linear(p["wi"], x).astype(jnp.float32)
+    fx = linear(p["wf"], x).astype(jnp.float32) + p["f_bias"]
+    ox = linear(p["wo"], x).astype(jnp.float32)
+
+    rz, ri, rf, ro = (p[k]["w"].astype(jnp.float32) for k in ("rz", "ri", "rf", "ro"))
+
+    def step(carry, xs):
+        h, c, n, m = carry
+        zx_, ix_, fx_, ox_ = xs  # (B, d)
+        zt = act_tanh(zx_ + h @ rz)
+        i_t = ix_ + h @ ri
+        f_t = fx_ + h @ rf
+        logf = -jax.nn.softplus(-f_t)  # log sigmoid
+        m_new = jnp.maximum(logf + m, i_t)
+        ip = act_exp(jnp.minimum(i_t - m_new, 0.0))
+        fp = act_exp(jnp.minimum(logf + m - m_new, 0.0))
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_tilde = c_new / jnp.maximum(n_new, 1e-6)
+        o = act_sigmoid(ox_ + h @ ro)
+        h_new = o * h_tilde
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (hF, cF, nF, mF), hs = jax.lax.scan(
+        step, (cache.h.astype(jnp.float32), cache.c.astype(jnp.float32),
+               cache.n.astype(jnp.float32), cache.m.astype(jnp.float32)),
+        (jnp.moveaxis(zx, 1, 0), jnp.moveaxis(ix, 1, 0),
+         jnp.moveaxis(fx, 1, 0), jnp.moveaxis(ox, 1, 0)),
+    )
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B, S, d)
+    out = linear(p["wd"], rmsnorm(p["norm"], h))
+    return out, SLSTMCache(hF, cF, nF, mF)
+
+
+def init_mlstm_cache(batch: int, d_model: int, n_heads: int) -> MLSTMCache:
+    D = d_model // n_heads
+    return MLSTMCache(
+        c=jnp.zeros((batch, n_heads, D, D), jnp.float32),
+        n=jnp.zeros((batch, n_heads, D), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32),
+    )
+
+
+def init_slstm_cache(batch: int, d_model: int) -> SLSTMCache:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return SLSTMCache(h=z, c=z, n=z, m=jnp.full((batch, d_model), -1e30, jnp.float32))

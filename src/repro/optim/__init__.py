@@ -1,0 +1,3 @@
+"""repro.optim — AdamW, schedules, gradient compression."""
+from . import adamw
+from .adamw import AdamWConfig

@@ -1,0 +1,17 @@
+"""repro.parallel — mesh, logical sharding rules, parameter partition specs."""
+
+from .sharding import (
+    current_mesh,
+    default_rules,
+    logical_to_spec,
+    shard_activation,
+    use_sharding,
+)
+
+__all__ = [
+    "current_mesh",
+    "default_rules",
+    "logical_to_spec",
+    "shard_activation",
+    "use_sharding",
+]

@@ -1,0 +1,74 @@
+"""Partition specs for serving caches (KV buffers, SSM/xLSTM states).
+
+Name-based rules over the cache pytree, divisibility-aware like params.py.
+Trailing-dim templates; extra leading dims (layer stacks / groups) replicate.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .sharding import default_rules
+
+_RULES = (
+    # attention KV buffers: (..., B, W, G, D)
+    (r"(^|/)(k|v|loc_k|loc_v|glob_k|glob_v|attn_k|attn_v)$",
+     ("batch", None, "heads", None)),
+    (r"(^|/)memory$", ("batch", None, None)),
+    (r"pos$", ()),  # replicated slot-position vectors
+    # mamba2 state: (..., B, H, P, N); conv carries: (..., B, K-1, C)
+    (r"(^|/)state$", ("batch", "ff", None, None)),
+    (r"(^|/)conv_x$", ("batch", None, "ff")),
+    (r"(^|/)conv_[bc]$", ("batch", None, None)),
+    # mLSTM: c (..., B, H, D, D); n (..., B, H, D); m (..., B, H)
+    (r"(^|/)m/c$", ("batch", None, None, "model")),
+    (r"(^|/)m/n$", ("batch", None, "model")),
+    (r"(^|/)m/m$", ("batch", None)),
+    # sLSTM: (..., B, d)
+    (r"(^|/)s/[hcnm]$", ("batch", "model")),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def cache_pspecs(abstract_cache, mesh: Mesh,
+                 rules: Optional[Dict[str, Any]] = None):
+    rules = rules or default_rules(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        for pat, template in _RULES:
+            if re.search(pat, ps):
+                n_extra = len(leaf.shape) - len(template)
+                if n_extra < 0:
+                    continue
+                spec = [None] * n_extra
+                for dim, logical in zip(leaf.shape[n_extra:], template):
+                    ax = rules.get(logical) if logical else None
+                    if ax is not None:
+                        size = int(np.prod(
+                            [sizes[a] for a in
+                             (ax if isinstance(ax, tuple) else (ax,))]))
+                        if dim % size != 0:
+                            ax = None
+                    spec.append(ax)
+                return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_cache)

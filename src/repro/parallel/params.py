@@ -1,0 +1,222 @@
+"""Parameter / optimizer-state partition specs.
+
+Specs are inferred from leaf *paths* (regex rules over the pytree path) with the
+logical->physical binding of ``sharding.default_rules``.  A dim is only sharded if
+its size is at least the axis size (GSPMD pads uneven dims, which we accept — the
+padding waste shows up honestly in the roofline's useful-FLOPs ratio).
+
+Stacked-layer leaves carry extra leading dims (L,) or (groups, per_group); rules
+match the TRAILING dims and the prefix is replicated.
+
+ZeRO-1 (`zero1=True`): optimizer moments additionally shard their first
+still-unsharded, large-enough dim over the data axis, so AdamW state is spread
+over the whole mesh instead of only the model axis.  XLA inserts the ZeRO
+gather/scatter around the (elementwise) update.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import default_rules
+
+# (path regex, trailing-dims logical template OR list of fallback templates —
+# first template whose sharded dims all divide evenly wins)
+_RULES: Tuple[Tuple[str, Any], ...] = (
+    # vocab-sharded embeddings; odd vocabs (whisper 51865, internvl 151655) fall
+    # back to sharding d_model
+    (r"(embed|unembed)/table$", [("vocab", None), (None, "model")]),
+    (r"vis_proj/w$", (None, None)),
+    # attention
+    (r"(attn|self|cross)/wq/w$", (None, "heads", None)),
+    (r"(attn|self|cross)/wk/w$", (None, "heads", None)),
+    (r"(attn|self|cross)/wv/w$", (None, "heads", None)),
+    (r"(attn|self|cross)/wo/w$", ("heads", None, None)),
+    (r"(attn|self|cross)/[qk]n/g$", (None,)),
+    # dense FFN (GLU or plain)
+    (r"(mlp|shared)/w[iu]/w$", (None, "ff")),
+    (r"(mlp|shared)/wd/w$", ("ff", None)),
+    # MoE
+    (r"experts/w[iu]$", ("expert", None, None)),
+    (r"experts/wd$", ("expert", None, None)),
+    (r"router/w$", (None, None)),
+    # Mamba2
+    (r"m/in_[zx]/w$", (None, "ff")),
+    (r"m/in_[bc]/w$", (None, None)),  # state projections are tiny: replicate
+    (r"m/in_dt/w$", (None, "ff")),
+    (r"m/conv_x/w$", (None, "ff")),
+    (r"m/conv_[bc]/w$", (None, None)),
+    (r"m/(dt_bias|a_log|d_skip)$", ("ff",)),
+    (r"m/norm/g$", ("ff",)),
+    (r"m/out/w$", ("ff", None)),
+    # xLSTM
+    (r"b/w[qkv]/w$", (None, "model")),
+    (r"b/wog/w$", (None, "model")),
+    (r"b/w[if]/w$", (None, None)),
+    (r"b/wo/w$", ("model", None)),
+    (r"b/wd/w$", ("model", None)),
+    (r"b/[rw][zifo]/w$", (None, "model")),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def _axis_size(ax, axis_sizes) -> int:
+    return int(np.prod([axis_sizes[a] for a in
+                        (ax if isinstance(ax, tuple) else (ax,))]))
+
+
+def _try_template(template, shape, rules, axis_sizes):
+    """Returns (spec, clean): clean=True iff every templated axis divided evenly."""
+    n_extra = len(shape) - len(template)
+    if n_extra < 0:
+        return None, False
+    spec = [None] * n_extra
+    clean = True
+    for dim, logical in zip(shape[n_extra:], template):
+        ax = rules.get(logical) if logical else None
+        if ax is not None and dim % _axis_size(ax, axis_sizes) != 0:
+            ax = None
+            clean = False
+        spec.append(ax)
+    return P(*spec), clean
+
+
+def _spec_for(path_s: str, shape, rules: Dict[str, Any], axis_sizes) -> P:
+    for pat, templates in _RULES:
+        if re.search(pat, path_s):
+            if isinstance(templates, tuple):
+                templates = [templates]
+            first = None
+            for template in templates:
+                spec, clean = _try_template(template, shape, rules, axis_sizes)
+                if spec is None:
+                    continue
+                if first is None:
+                    first = spec
+                if clean:
+                    return spec
+            return first if first is not None else P()
+    return P()  # replicate
+
+
+# Optional FSDP-at-use: leaves whose per-device footprint (after model sharding)
+# exceeds the threshold get a second dim sharded over the data axis and are
+# gathered at use.  DISABLED by default (0): with scanned layer stacks XLA hoists
+# the per-layer gathers out of the loop, materializing ALL layers at once
+# (measured 171 GB temp on yi-34b).  Large models instead use weight-update
+# sharding (train.loop WUS): master params fully 2D-sharded, ONE cast+gather to
+# the TP work layout per step, outside the scan.
+FSDP_THRESHOLD_BYTES = 0
+
+
+def param_pspecs(abstract_params, mesh: Mesh,
+                 rules: Optional[Dict[str, Any]] = None,
+                 fsdp_threshold: int = FSDP_THRESHOLD_BYTES):
+    """PartitionSpec tree matching ``abstract_params`` (from jax.eval_shape).
+
+    Primary axis assignment is rule-based (TP); any leaf still larger than
+    ``fsdp_threshold`` per device additionally shards its largest free dim over
+    the data axis (weight-gathered at use; XLA inserts the all-gathers)."""
+    rules = rules or default_rules(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = rules.get("batch")
+    dsize = (_axis_size(data_axes, sizes) if data_axes is not None else 1)
+
+    def assign(path, leaf):
+        spec = _spec_for(_path_str(path), leaf.shape, rules, sizes)
+        if data_axes is None or fsdp_threshold <= 0:
+            return spec
+        spec_t = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+        shards = int(np.prod([_axis_size(s, sizes) for s in spec_t
+                              if s is not None] or [1]))
+        dtype_bytes = getattr(leaf.dtype, "itemsize", 4)
+        per_dev = int(np.prod(leaf.shape)) * dtype_bytes / shards
+        if per_dev <= fsdp_threshold:
+            return spec
+        # shard the largest free, divisible dim over the data axis
+        free = [(leaf.shape[i], i) for i in range(leaf.ndim)
+                if spec_t[i] is None and leaf.shape[i] % dsize == 0]
+        if not free:
+            return spec
+        _, dim = max(free)
+        out = list(spec_t)
+        out[dim] = data_axes
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+def fsdp_pspecs(abstract_params, mesh: Mesh):
+    """Pure-FSDP (ZeRO-3) specs: every leaf's largest divisible dim shards over
+    the FLAT device mesh (all axes); no tensor parallelism.  Used by the 'fsdp'
+    perf variant (DESIGN.md §6, EXPERIMENTS.md §Perf)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    all_axes = tuple(mesh.axis_names)
+    total = int(np.prod(mesh.devices.shape))
+
+    def assign(path, leaf):
+        dims = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in dims:
+            if leaf.shape[i] % total == 0:
+                spec = [None] * leaf.ndim
+                spec[i] = all_axes
+                return P(*spec)
+        for ax in all_axes:  # fall back to a single-axis shard
+            for i in dims:
+                if leaf.shape[i] % sizes[ax] == 0:
+                    spec = [None] * leaf.ndim
+                    spec[i] = ax
+                    return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+def zero1_pspecs(abstract_params, mesh: Mesh,
+                 rules: Optional[Dict[str, Any]] = None):
+    """Optimizer-moment specs: param spec + first free dim sharded over data."""
+    rules = rules or default_rules(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = rules.get("batch")
+    base = param_pspecs(abstract_params, mesh, rules)
+    if data_axes is None:
+        return base
+    dsize = int(np.prod([sizes[a] for a in
+                         (data_axes if isinstance(data_axes, tuple) else (data_axes,))]))
+
+    def extend(leaf, spec):
+        spec_t = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        flat = [a for s in spec_t if s is not None
+                for a in (s if isinstance(s, tuple) else (s,))]
+        if any(a in flat for a in
+               (data_axes if isinstance(data_axes, tuple) else (data_axes,))):
+            return P(*spec_t)  # FSDP'd leaf: data axis already in use
+        out = list(spec_t)
+        for i, (dim, s) in enumerate(zip(leaf.shape, spec_t)):
+            if s is None and dim % dsize == 0 and dim >= dsize:
+                out[i] = data_axes
+                break
+        return P(*out)
+
+    return jax.tree.map(extend, abstract_params, base)
+
+
+def shardings_from_specs(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

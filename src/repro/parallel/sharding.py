@@ -1,0 +1,70 @@
+"""Logical-axis sharding: models annotate activations with *logical* axis names;
+the launcher binds them to physical mesh axes.  Without an active binding the
+annotations are no-ops, so smoke tests run un-meshed.
+
+    with use_sharding(mesh, LOGICAL_RULES):
+        loss = jax.jit(train_step, ...)(...)
+
+Rules map logical names -> mesh axis (or tuple of axes, or None).  The defaults
+implement the DESIGN.md §6 layout: batch over ('pod','data'), feature/expert/vocab
+/head dims over 'model', sequence unsharded.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def default_rules(mesh: Mesh) -> Dict[str, Any]:
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes) or None
+    model = "model" if "model" in axes else None
+    # experts also shard over the pod axis on multi-pod meshes (EP=32): halves
+    # the per-chip expert work copy — what makes qwen3-235B fit 2 pods
+    expert = (("pod", "model") if ("pod" in axes and model) else model)
+    return {
+        "batch": batch,
+        "model": model,
+        "expert": expert,
+        "vocab": model,
+        "heads": model,
+        "ff": model,
+    }
+
+
+@contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[Dict[str, Any]] = None):
+    prev = getattr(_ctx, "binding", None)
+    _ctx.binding = (mesh, rules or (default_rules(mesh) if mesh else {}))
+    try:
+        yield
+    finally:
+        _ctx.binding = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    b = getattr(_ctx, "binding", None)
+    return b[0] if b else None
+
+
+def logical_to_spec(*logical) -> P:
+    b = getattr(_ctx, "binding", None)
+    rules = b[1] if b else {}
+    return P(*(rules.get(l) if l is not None else None for l in logical))
+
+
+def shard_activation(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint under the active binding; identity otherwise."""
+    b = getattr(_ctx, "binding", None)
+    if not b or b[0] is None:
+        return x
+    mesh, rules = b
+    spec = P(*(rules.get(l) if l is not None else None for l in logical))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

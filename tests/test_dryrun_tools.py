@@ -1,0 +1,155 @@
+"""Unit tests for the dry-run/roofline tooling: HLO collective parsing, the
+analytic cost model's invariants, and the roofline term arithmetic."""
+
+import numpy as np
+import pytest
+
+from repro.models import SHAPES_BY_NAME, get_config, shapes_for
+from repro.models.config import make_attn_geom
+
+
+class TestCollectiveParser:
+    def _parse(self, text):
+        import importlib
+
+        dr = importlib.import_module("repro.launch.dryrun")
+        return dr.collective_bytes(text)
+
+    def test_basic_ops(self):
+        hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=[16,16]<=[256]
+  %ar = f32[8,8]{1,0} all-reduce(%y), to_apply=%add
+  %a2a = bf16[4,256]{1,0} all-to-all(%z), dimensions={0}
+  %rs = f32[2,8]{1,0} reduce-scatter(%w), dimensions={0}
+  %cp = u32[8]{0} collective-permute(%v), source_target_pairs={{0,1}}
+"""
+        out = self._parse(hlo)
+        assert out["all-gather"] == 16 * 1024 * 2
+        assert out["all-reduce"] == 8 * 8 * 4
+        assert out["all-to-all"] == 4 * 256 * 2
+        assert out["reduce-scatter"] == 2 * 8 * 4
+        assert out["collective-permute"] == 8 * 4
+        assert out["counts"]["all-gather"] == 1
+
+    def test_start_counted_done_skipped(self):
+        hlo = """
+  %s = bf16[64]{0} all-gather-start(%x)
+  %d = bf16[64]{0} all-gather-done(%s)
+"""
+        out = self._parse(hlo)
+        assert out["counts"]["all-gather"] == 1
+        assert out["all-gather"] == 64 * 2
+
+    def test_tuple_result(self):
+        hlo = "  %t = (f32[8]{0}, f32[8]{0}) all-reduce(%a, %b), to_apply=%add\n"
+        out = self._parse(hlo)
+        assert out["all-reduce"] == 2 * 8 * 4
+
+
+class TestAttnGeom:
+    @pytest.mark.parametrize("h,g,exp", [
+        (56, 8, (64, 16, 2, 0)),   # yi: pad q 56->64, repeat kv x2
+        (64, 4, (64, 16, 4, 0)),   # qwen3: repeat x4
+        (24, 2, (32, 16, 8, 0)),   # starcoder2
+        (14, 2, (16, 16, 8, 0)),   # internvl
+        (16, 8, (16, 16, 2, 0)),   # gemma3
+        (12, 12, (16, 16, 1, 4)),  # whisper: zero-pad kv groups
+        (16, 16, (16, 16, 1, 0)),  # deepseek MHA
+        (32, 32, (32, 32, 1, 0)),  # stablelm/zamba2
+    ])
+    def test_normalization(self, h, g, exp):
+        geom = make_attn_geom(h, g, 128)
+        assert (geom.h_eff, geom.g_eff, geom.repeat, geom.g_zero_pad) == exp
+        assert geom.h_eff % geom.g_eff == 0
+        assert geom.g_eff % 16 == 0  # always shards the production model axis
+
+    def test_mask_counts_real_heads(self):
+        import jax
+
+        from repro.models.attention import head_mask
+
+        for h, g in [(56, 8), (24, 2), (12, 12), (64, 4)]:
+            geom = make_attn_geom(h, g, 128)
+            m = np.asarray(head_mask(geom))
+            assert m.sum() == h, (h, g, m.sum())
+
+
+class TestCostModel:
+    def _costs(self, arch, shape_name, **kw):
+        from benchmarks.cost_model import cell_costs
+
+        cfg = get_config(arch)
+        shape = SHAPES_BY_NAME[shape_name]
+        return cell_costs(cfg, shape, **kw)
+
+    def test_terms_positive_all_cells(self):
+        for arch in ("yi-34b", "qwen3-moe-235b-a22b", "xlstm-125m",
+                     "zamba2-1.2b", "whisper-small", "gemma3-12b"):
+            cfg = get_config(arch)
+            for shape in shapes_for(cfg):
+                from benchmarks.cost_model import cell_costs
+
+                c = cell_costs(cfg, shape)
+                assert c.flops_dev > 0 and c.hbm_bytes_dev > 0
+                assert c.ideal_flops_dev > 0
+
+    def test_train_flops_close_to_6nd(self):
+        """Dense train analytic flops within [1, 2]x of 6*N*D (remat 4/3 + attn)."""
+        c = self._costs("stablelm-3b", "train_4k")
+        ratio = c.flops_dev / c.ideal_flops_dev
+        assert 1.0 < ratio < 2.0, ratio
+
+    def test_moe_uses_active_params(self):
+        c = self._costs("qwen3-moe-235b-a22b", "train_4k")
+        cfg = get_config("qwen3-moe-235b-a22b")
+        # flops must track ACTIVE (~22B), not total (235B): 6*N_total*D would be
+        # ~10x the analytic number
+        dense_equiv = 6.0 * cfg.param_count() * 256 * 4096 / 256
+        assert c.flops_dev < 0.5 * dense_equiv
+
+    def test_decode_ideal_bytes_floor(self):
+        c = self._costs("yi-34b", "decode_32k")
+        assert 0 < c.ideal_bytes_dev <= c.hbm_bytes_dev
+
+    def test_variants_reduce_collectives(self):
+        base = self._costs("yi-34b", "train_4k", variant="base")
+        fsdp = self._costs("yi-34b", "train_4k", variant="fsdp")
+        assert fsdp.coll_bytes_dev < base.coll_bytes_dev
+        qb = self._costs("qwen3-moe-235b-a22b", "train_4k", variant="base")
+        ql = self._costs("qwen3-moe-235b-a22b", "train_4k", variant="limit4")
+        assert ql.coll_bytes_dev < qb.coll_bytes_dev
+        xb = self._costs("xlstm-125m", "train_4k", variant="base")
+        xd = self._costs("xlstm-125m", "train_4k", variant="ddp")
+        assert xd.coll_bytes_dev < 0.1 * xb.coll_bytes_dev
+
+    def test_local_window_cheaper_than_global(self):
+        """gemma3's 5:1 local:global must cost less attention than all-global."""
+        from benchmarks.cost_model import forward_flops
+
+        cfg = get_config("gemma3-12b")
+        from repro.models.config import AttnConfig
+
+        all_global = cfg.replace(attn=AttnConfig(qk_norm=True))
+        tok = 32 * 32768.0
+        assert forward_flops(cfg, tok, 32768) < forward_flops(all_global, tok,
+                                                              32768)
+
+
+class TestRoofline:
+    def test_fraction_bounded(self):
+        from benchmarks.roofline import analyze
+
+        for arch in ("stablelm-3b", "zamba2-1.2b"):
+            cfg = get_config(arch)
+            for shape in shapes_for(cfg):
+                a = analyze(arch, shape.name, "16x16")
+                assert 0 <= a["roofline_fraction"] <= 1.05, (arch, shape.name, a)
+                assert a["dominant"] in ("compute", "memory", "collective")
+
+    def test_variant_improves_hillclimb_cells(self):
+        from benchmarks.roofline import analyze
+
+        assert (analyze("xlstm-125m", "train_4k", "16x16", "ddp")
+                ["roofline_fraction"]
+                > 10 * analyze("xlstm-125m", "train_4k", "16x16", "base")
+                ["roofline_fraction"])

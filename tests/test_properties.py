@@ -1,0 +1,143 @@
+"""Hypothesis property tests for the system's invariants.
+
+Invariants from the paper:
+  1. Error bound: for any (function, interval, Ea, algorithm, omega), the generated
+     table never exceeds Ea anywhere in the interval (Eq. 10 guarantee).
+  2. Footprint dominance: any accepted split has footprint <= the Reference footprint
+     (splits are only accepted when they reduce).
+  3. Partition validity: sorted, spans exactly [lo, hi), no empty sub-intervals.
+  4. Monotone Ea: halving Ea never shrinks the Reference footprint.
+  5. Fixed-point quantization is idempotent and bounded by half-ULP in range.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FixedPointFormat,
+    build_table,
+    delta_for,
+    footprint,
+    get_function,
+    reference_spacing,
+    split,
+)
+
+FUNCS = ["log", "exp", "tanh", "sigmoid", "gauss", "gelu", "silu", "softplus"]
+ALGS = ["reference", "binary", "hierarchical", "sequential"]
+
+
+def subinterval(name, frac_lo, frac_len):
+    """Map two unit floats to a non-degenerate sub-interval of the registry default."""
+    lo0, hi0 = get_function(name).interval
+    span = hi0 - lo0
+    lo = lo0 + frac_lo * span * 0.8
+    length = max(span * 0.05, frac_len * (hi0 - lo) * 0.95)
+    hi = min(hi0, lo + length)
+    if hi - lo < span * 0.02:
+        hi = min(hi0, lo + span * 0.02)
+    return float(lo), float(hi)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    name=st.sampled_from(FUNCS),
+    alg=st.sampled_from(ALGS),
+    frac_lo=st.floats(0.0, 1.0),
+    frac_len=st.floats(0.1, 1.0),
+    ea_exp=st.floats(-6.0, -2.0),
+    omega=st.floats(0.05, 0.9),
+)
+def test_error_bound_invariant(name, alg, frac_lo, frac_len, ea_exp, omega):
+    lo, hi = subinterval(name, frac_lo, frac_len)
+    ea = 10.0 ** ea_exp
+    ts = build_table(name, ea, lo, hi, algorithm=alg, omega=omega)
+    err = ts.max_error_on_grid(n=20_001)
+    assert err <= ea * (1 + 1e-6), (name, alg, lo, hi, ea, err)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    name=st.sampled_from(FUNCS),
+    alg=st.sampled_from(["binary", "hierarchical", "sequential"]),
+    frac_lo=st.floats(0.0, 1.0),
+    frac_len=st.floats(0.1, 1.0),
+    ea_exp=st.floats(-6.0, -2.0),
+    omega=st.floats(0.05, 0.9),
+)
+def test_split_never_worse_than_reference(name, alg, frac_lo, frac_len, ea_exp, omega):
+    lo, hi = subinterval(name, frac_lo, frac_len)
+    ea = 10.0 ** ea_exp
+    fn = get_function(name)
+    ref = reference_spacing(fn, ea, lo, hi)
+    sr = split(alg, name, ea, lo, hi, omega)
+    # Eq.13 double-counts shared boundary entries; a 1-interval split == reference.
+    # Any accepted split strictly reduced, so footprint <= reference always.
+    assert sr.footprint <= ref.footprint + 1, (sr.footprint, ref.footprint)
+    # partition validity
+    p = sr.partition
+    assert p[0] == pytest.approx(lo) and p[-1] == pytest.approx(hi)
+    assert np.all(np.diff(p) > 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    name=st.sampled_from(FUNCS),
+    frac_lo=st.floats(0.0, 1.0),
+    frac_len=st.floats(0.1, 1.0),
+    ea_exp=st.floats(-5.0, -2.0),
+)
+def test_footprint_monotone_in_ea(name, frac_lo, frac_len, ea_exp):
+    lo, hi = subinterval(name, frac_lo, frac_len)
+    ea = 10.0 ** ea_exp
+    fn = get_function(name)
+    big = reference_spacing(fn, ea, lo, hi).footprint
+    small = reference_spacing(fn, ea / 2.0, lo, hi).footprint
+    assert small >= big
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    signed=st.integers(0, 1),
+    width=st.integers(4, 32),
+    frac=st.integers(0, 30),
+    data=st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=16),
+)
+def test_fixed_point_idempotent_and_bounded(signed, width, frac, data):
+    frac = min(frac, width - signed)
+    fmt = FixedPointFormat(signed, width, frac)
+    x = np.asarray(data)
+    q = fmt.quantize(x)
+    np.testing.assert_array_equal(fmt.quantize(q), q)
+    in_range = (x >= fmt.min_value) & (x <= fmt.max_value)
+    if in_range.any():
+        err = np.abs(q[in_range] - x[in_range])
+        assert np.max(err) <= fmt.quantization_error_bound() * (1 + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    name=st.sampled_from(FUNCS),
+    ea_exp=st.floats(-6.0, -2.0),
+    n_cuts=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_any_partition_respects_bound(name, ea_exp, n_cuts, seed):
+    """Eq. 11 per sub-interval => bound holds for ARBITRARY partitions, not just
+    the three algorithms' outputs (the paper's guarantee is partition-independent)."""
+    from repro.core.splitting import SplitResult, _finalize
+    from repro.core.spacing import SecondDerivMax
+
+    fn = get_function(name)
+    lo, hi = fn.interval
+    ea = 10.0 ** ea_exp
+    rng = np.random.default_rng(seed)
+    cuts = np.sort(rng.uniform(lo, hi, size=n_cuts))
+    cuts = cuts[(cuts > lo + 1e-6) & (cuts < hi - 1e-6)]
+    oracle = SecondDerivMax(fn, lo, hi)
+    sr = _finalize(fn, oracle, [lo, *cuts.tolist(), hi], ea, 0.3, "manual")
+    ts = build_table(name, ea, lo, hi, algorithm="manual", split_result=sr)
+    assert ts.max_error_on_grid(n=20_001) <= ea * (1 + 1e-6)
