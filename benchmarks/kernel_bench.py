@@ -65,3 +65,44 @@ def interval_count_flatness(size: int = 1 << 18) -> List[tuple]:
     rows.append(("kernel.flatness.spread", round(spread, 2),
                  "CPU serializes the compare chain; flat on the TPU VPU"))
     return rows
+
+
+def pack_dispatch_bench(size: int = 1 << 18) -> List[tuple]:
+    """TablePack vs per-table dispatch: F functions through ONE packed artifact
+    and one fused kernel (static fn_id row select) versus F separate tables,
+    each with its own VMEM residency and pallas_call.  Also reports the VMEM
+    footprint both ways — the BRAM-instantiation win the pack exists for."""
+    from repro.approx import pack_specs
+    from repro.core import vmem_cost, vmem_cost_pack
+    from repro.kernels.ops import table_lookup, table_pack_lookup
+    from repro.approx.jax_table import from_spec
+
+    names = ("gelu", "silu", "tanh", "sigmoid_sym", "exp_neg")
+    specs = [build_table(n, 1e-4, algorithm="hierarchical", omega=0.2)
+             for n in names]
+    pack = pack_specs(specs)
+    tables = [from_spec(s) for s in specs]
+    x = jnp.asarray(np.random.default_rng(2).normal(0, 3, size).astype(np.float32))
+
+    def per_table_all(v):
+        return [table_lookup(jt, v) for jt in tables]
+
+    def pack_all(v):
+        return [table_pack_lookup(pack, i, v) for i in range(len(names))]
+
+    tp = _time(lambda v: pack_all(v)[-1], x)
+    tt = _time(lambda v: per_table_all(v)[-1], x)
+    rows = [
+        ("kernel.pack.dispatch_us", round(tp, 1),
+         f"F={len(names)} fns, one pack, n={size}"),
+        ("kernel.pack.per_table_us", round(tt, 1), f"ratio={tt / tp:.2f}x"),
+    ]
+    vm_pack = vmem_cost_pack([s.footprint for s in specs],
+                             [s.n_intervals for s in specs]).padded_bytes
+    vm_tabs = sum(vmem_cost(s.footprint, s.n_intervals).padded_bytes
+                  for s in specs)
+    rows.append(("kernel.pack.vmem_bytes", vm_pack,
+                 f"vs {vm_tabs}B across {len(names)} per-table residencies"))
+    print(f"[pack] {len(names)} fns: pack={tp:8.1f}us  per-table={tt:8.1f}us  "
+          f"({tt / tp:.2f}x)  VMEM {vm_tabs} -> {vm_pack} B")
+    return rows

@@ -21,7 +21,8 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--mode", default="table_ref",
-                    choices=["exact", "table_ref", "table_pallas"])
+                    choices=["exact", "table_ref", "table_pallas", "table_pack",
+                             "table_pack_ref"])
     args = ap.parse_args()
 
     cfg = get_config("gemma3-12b").replace(

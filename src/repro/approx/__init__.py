@@ -1,15 +1,30 @@
 """repro.approx — JAX runtime of the paper's table-based function approximation."""
 
-from .activations import EXACT, ApproxConfig, get_exact
+from .activations import DEFAULT_PACK_FUNCTIONS, EXACT, ApproxConfig, get_exact
 from .jax_table import JaxTable, eval_table_ref, eval_table_slope, from_spec, make_table_fn
+from .table_pack import (
+    TablePack,
+    build_pack,
+    eval_pack_ref,
+    eval_pack_slope,
+    make_pack_fn,
+    pack_specs,
+)
 
 __all__ = [
+    "DEFAULT_PACK_FUNCTIONS",
     "EXACT",
     "ApproxConfig",
     "JaxTable",
+    "TablePack",
+    "build_pack",
+    "eval_pack_ref",
+    "eval_pack_slope",
     "eval_table_ref",
     "eval_table_slope",
     "from_spec",
     "get_exact",
+    "make_pack_fn",
     "make_table_fn",
+    "pack_specs",
 ]

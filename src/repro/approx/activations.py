@@ -1,6 +1,9 @@
 """Nonlinearity backend: every elementary function the model zoo evaluates can run
-``exact`` (jnp transcendentals), ``table_ref`` (paper-faithful jnp table), or
-``table_pallas`` (fused VMEM kernel).  Configured per-model via :class:`ApproxConfig`.
+``exact`` (jnp transcendentals), ``table_ref`` (paper-faithful jnp table),
+``table_pallas`` (fused VMEM kernel, one table per function), ``table_pack``
+(ONE packed multi-function artifact + one fused kernel for the whole network),
+or ``table_pack_ref`` (the pack's jnp oracle).  Configured per-model via
+:class:`ApproxConfig`.
 """
 
 from __future__ import annotations
@@ -15,9 +18,25 @@ import jax.numpy as jnp
 from repro.core.flow import cached_table
 from repro.core.functions import get as get_function
 
-from .jax_table import JaxTable, eval_table_ref, from_spec, make_table_fn
+from .jax_table import JaxTable, from_spec, make_table_fn
+from .table_pack import TablePack, build_pack, make_pack_fn
 
-Mode = str  # "exact" | "table_ref" | "table_pallas"
+Mode = str  # "exact" | "table_ref" | "table_pallas" | "table_pack" | "table_pack_ref"
+
+TABLE_MODES = ("table_ref", "table_pallas", "table_pack", "table_pack_ref")
+PACK_MODES = ("table_pack", "table_pack_ref")
+
+# The function set the model zoo routes through the approx backend (post
+# _TABLE_NAME remap).  One pack built over this set serves every architecture:
+# gelu/silu for MLPs, tanh + sigmoid_sym for gates/softcap, softplus for SSM
+# dt, exp_neg for the softmax exponent.
+DEFAULT_PACK_FUNCTIONS = (
+    "gelu", "silu", "tanh", "sigmoid_sym", "softplus", "exp_neg",
+)
+
+# One pack per distinct (functions, e_a, algorithm, omega, intervals) — model
+# constructors re-request the same pack for every layer/activation.
+_PACK_CACHE: Dict[tuple, TablePack] = {}
 
 _EXACT: Dict[str, Callable] = {
     "gelu": lambda x: jax.nn.gelu(x, approximate=False),
@@ -65,6 +84,7 @@ class ApproxConfig:
     exact_grad: bool = False
     softmax_table: bool = False
     interval_overrides: Dict[str, Tuple[float, float]] = field(default_factory=dict)
+    pack_functions: Tuple[str, ...] = DEFAULT_PACK_FUNCTIONS
 
     def table_for(self, name: str) -> JaxTable:
         reg_name = _TABLE_NAME.get(name, name)
@@ -74,18 +94,43 @@ class ApproxConfig:
         )
         return from_spec(spec)
 
+    def pack(self) -> TablePack:
+        """The ONE multi-function pack this config's activations share."""
+        names = tuple(self.pack_functions)
+        overrides = tuple(sorted(
+            (k, v) for k, v in self.interval_overrides.items() if k in names))
+        key = (names, self.e_a, self.algorithm, self.omega, overrides)
+        if key not in _PACK_CACHE:
+            _PACK_CACHE[key] = build_pack(
+                names, self.e_a, algorithm=self.algorithm, omega=self.omega,
+                intervals=dict(overrides))
+        return _PACK_CACHE[key]
+
     def unary(self, name: str) -> Callable[[jax.Array], jax.Array]:
         """The activation callable for this config."""
         if self.mode == "exact" or name in _NEVER_TABLED:
             return _EXACT[name]
-        if self.mode not in ("table_ref", "table_pallas"):
+        if self.mode not in TABLE_MODES:
             raise ValueError(f"unknown approx mode {self.mode!r}")
         reg_name = _TABLE_NAME.get(name, name)
-        jt = self.table_for(name)
         exact_d1 = None
         if self.exact_grad:
             fn = get_function(reg_name)
             exact_d1 = partial(fn.d1f, xp=jnp)
+        if self.mode in PACK_MODES:
+            pack = self.pack()
+            if reg_name not in pack.names:
+                raise KeyError(
+                    f"{reg_name!r} is not in pack_functions={pack.names}; add it "
+                    f"to ApproxConfig.pack_functions to serve it from the pack")
+            return make_pack_fn(
+                pack,
+                reg_name,
+                use_pallas=(self.mode == "table_pack"),
+                exact_d1=exact_d1,
+                extrapolate=(name in _EXTRAPOLATE),
+            )
+        jt = self.table_for(name)
         return make_table_fn(
             jt,
             use_pallas=(self.mode == "table_pallas"),

@@ -3,10 +3,13 @@
 The evaluation mirrors the paper's Fig. 7 circuit, adapted to a SIMD machine
 (see DESIGN.md §2):
 
-  interval selector  — branchless comparator *plane*: one vector compare per interior
-                       boundary, accumulated into running selects of (p_j, inv_d_j,
-                       base_j, seg_j).  No gather, no tree: cost is n-1 FMAs/compares
-                       per element, n = #sub-intervals (<= ~32 in practice).
+  interval selector  — branchless comparator *plane*: ONE broadcast compare of x
+                       against the whole boundary vector plus one sum-reduction
+                       yields j = #(x >= b_m); four tiny gathers then fetch
+                       (p_j, inv_d_j, base_j, seg_j).  No per-boundary FMA chain:
+                       the old running-select accumulation serialized n-1
+                       dependent FMAs per parameter and drifted by accumulated
+                       rounding; the gather form is exact and O(1)-depth.
   address generator  — i = floor((x - p_j) * inv_d_j), clamped to the sub-table.
   BRAM lookup        — one adjacent-pair gather from the packed values vector.
   interpolation      — a single FMA: y0 + t * (y1 - y0).
@@ -59,23 +62,25 @@ def from_spec(spec: TableSpec, dtype=jnp.float32) -> JaxTable:
     )
 
 
-def _select_params(jt: JaxTable, xf: jax.Array):
-    """Comparator plane: per-element (p_j, inv_d_j, base_j, seg_j) as running sums.
+def select_interval(boundaries: jax.Array, n_intervals: int, xf: jax.Array) -> jax.Array:
+    """Vectorized comparator plane: j(x) = clip(#(x >= b_m, m >= 1), 0, n-1).
 
-    For sorted boundaries b_0..b_n the sub-interval parameters are
-        p(x) = b_0 + sum_m [x >= b_m] (b_m - b_{m-1})   (same for invd/base/segs)
-    i.e. a mux tree flattened into FMAs — no gather, no branches.
+    One broadcast compare against the (n,) interior+upper boundary row and one
+    sum-reduction per element; ``boundaries`` may be right-padded (e.g. with
+    ``+inf`` in a multi-function pack plane) — padding never compares true, and
+    the clip pins x >= hi into the last real sub-interval (the address clamp).
     """
-    p = jnp.full_like(xf, jt.boundaries[0])
-    invd = jnp.full_like(xf, jt.inv_delta[0])
-    base = jnp.full_like(xf, jt.base[0])
-    segs = jnp.full_like(xf, jt.seg_count[0])
-    for m in range(1, jt.n_intervals):
-        ge = (xf >= jt.boundaries[m]).astype(jnp.float32)
-        p = p + ge * (jt.boundaries[m] - jt.boundaries[m - 1])
-        invd = invd + ge * (jt.inv_delta[m] - jt.inv_delta[m - 1])
-        base = base + ge * (jt.base[m] - jt.base[m - 1])
-        segs = segs + ge * (jt.seg_count[m] - jt.seg_count[m - 1])
+    j = jnp.sum((xf[..., None] >= boundaries[1:]).astype(jnp.int32), axis=-1)
+    return jnp.minimum(j, n_intervals - 1)
+
+
+def _select_params(jt: JaxTable, xf: jax.Array):
+    """Per-element (p_j, inv_d_j, base_j, seg_j): one selector, four gathers."""
+    j = select_interval(jt.boundaries, jt.n_intervals, xf)
+    p = jnp.take(jt.boundaries, j, axis=0)
+    invd = jnp.take(jt.inv_delta, j, axis=0)
+    base = jnp.take(jt.base, j, axis=0)
+    segs = jnp.take(jt.seg_count, j, axis=0)
     return p, invd, base, segs
 
 

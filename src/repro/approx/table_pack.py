@@ -1,0 +1,203 @@
+"""TablePack — every table a model needs, fused into ONE device artifact.
+
+The paper keeps each function's table resident in BRAM next to its consumer
+(Sec. 7.2); a network, however, evaluates a *set* of nonlinearities (gelu for
+the MLP, sigmoid/tanh for gates, exp for softmax...), and shipping one table +
+one kernel dispatch per function multiplies both the VMEM residency and the
+dispatch overhead by F.  A :class:`TablePack` concatenates all range values
+into a single ``values`` vector and stores selector metadata as (F, n_max)
+padded planes (see :class:`repro.core.packing.PackLayout`), so
+
+  * ONE artifact stays VMEM-resident for the whole network (BRAM instantiation
+    lifted to the function-set level), and
+  * ONE fused Pallas kernel — ``repro.kernels.table_pack_lookup`` — serves any
+    member function via a static ``fn_id`` row index.
+
+``eval_pack_ref`` is the pure-jnp oracle; it reproduces the per-table
+``eval_table_ref`` BIT FOR BIT (same compare/gather/FMA sequence on the same
+f32 values; the pack only rebases the BRAM addresses), which the parity tests
+assert for every registered function.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flow import cached_table
+from repro.core.packing import PackLayout, pack_layout
+from repro.core.table import TableSpec
+
+from .jax_table import select_interval
+
+
+class TablePack(NamedTuple):
+    """Device-ready multi-function table artifact (all array leaves jnp, f32)."""
+
+    names: Tuple[str, ...]  # static: member function names (fn_id order)
+    n_intervals: Tuple[int, ...]  # static: real sub-interval count per member
+    boundaries: jax.Array  # (F, n_max+1) f32, right-padded +inf
+    inv_delta: jax.Array  # (F, n_max)   f32
+    delta: jax.Array  # (F, n_max)   f32
+    base: jax.Array  # (F, n_max)   f32 — GLOBAL packed-values index (exact < 2^24)
+    seg_count: jax.Array  # (F, n_max)   f32
+    values: jax.Array  # (M,)         f32 — all member tables, concatenated
+
+    @property
+    def n_functions(self) -> int:
+        return len(self.names)
+
+    @property
+    def n_max(self) -> int:
+        return self.inv_delta.shape[1]
+
+    @property
+    def footprint(self) -> int:
+        return self.values.shape[0]
+
+    def fn_id(self, name: str) -> int:
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise KeyError(f"function {name!r} not in pack {self.names}") from None
+
+
+def from_layout(layout: PackLayout, dtype=jnp.float32) -> TablePack:
+    if layout.footprint >= (1 << 24):
+        raise ValueError("pack footprint exceeds f32 exact-integer range")
+    return TablePack(
+        names=layout.names,
+        n_intervals=layout.n_intervals,
+        boundaries=jnp.asarray(layout.boundaries, dtype=dtype),
+        inv_delta=jnp.asarray(layout.inv_delta, dtype=dtype),
+        delta=jnp.asarray(layout.delta, dtype=dtype),
+        base=jnp.asarray(layout.base.astype(np.float64), dtype=dtype),
+        seg_count=jnp.asarray(layout.seg_count.astype(np.float64), dtype=dtype),
+        values=jnp.asarray(layout.values, dtype=dtype),
+    )
+
+
+def pack_specs(specs: Sequence[TableSpec]) -> TablePack:
+    """Pack already-built TableSpecs (order defines fn_id)."""
+    return from_layout(pack_layout(specs))
+
+
+def build_pack(
+    names: Sequence[str],
+    e_a: float,
+    *,
+    algorithm: str = "hierarchical",
+    omega: float = 0.3,
+    intervals: Optional[dict] = None,
+) -> TablePack:
+    """Run the design flow for every name and fuse the artifacts into one pack."""
+    intervals = intervals or {}
+    specs = []
+    for name in names:
+        lo, hi = intervals.get(name, (None, None))
+        specs.append(cached_table(name, e_a, lo, hi, algorithm=algorithm,
+                                  omega=omega))
+    return pack_specs(specs)
+
+
+def _resolve(pack: TablePack, fn) -> int:
+    return pack.fn_id(fn) if isinstance(fn, str) else int(fn)
+
+
+def _select_pack_params(pack: TablePack, fid: int, xf: jax.Array):
+    """One selector + four gathers against function ``fid``'s metadata row."""
+    brow = pack.boundaries[fid]
+    j = select_interval(brow, pack.n_intervals[fid], xf)
+    p = jnp.take(brow, j, axis=0)
+    invd = jnp.take(pack.inv_delta[fid], j, axis=0)
+    base = jnp.take(pack.base[fid], j, axis=0)
+    segs = jnp.take(pack.seg_count[fid], j, axis=0)
+    return p, invd, base, segs
+
+
+def eval_pack_ref(pack: TablePack, fn, x: jax.Array, *,
+                  extrapolate: bool = False) -> jax.Array:
+    """Pure-jnp pack evaluation — bit-identical to per-table ``eval_table_ref``."""
+    fid = _resolve(pack, fn)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    p, invd, base, segs = _select_pack_params(pack, fid, xf)
+    u = (xf - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    y0 = jnp.take(pack.values, a, axis=0)
+    y1 = jnp.take(pack.values, a + 1, axis=0)
+    t = u - i
+    if not extrapolate:
+        t = jnp.clip(t, 0.0, 1.0)
+    return (y0 + t * (y1 - y0)).astype(dtype)
+
+
+def eval_pack_slope(pack: TablePack, fn, x: jax.Array, *,
+                    extrapolate: bool = False) -> jax.Array:
+    """d/dx of the pack surrogate — bit-identical to ``eval_table_slope``."""
+    fid = _resolve(pack, fn)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    p, invd, base, segs = _select_pack_params(pack, fid, xf)
+    i = jnp.clip(jnp.floor((xf - p) * invd), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    y0 = jnp.take(pack.values, a, axis=0)
+    y1 = jnp.take(pack.values, a + 1, axis=0)
+    slope = (y1 - y0) * invd
+    if not extrapolate:
+        n = pack.n_intervals[fid]
+        inside = (xf >= pack.boundaries[fid, 0]) & (xf < pack.boundaries[fid, n])
+        slope = slope * inside.astype(jnp.float32)
+    return slope.astype(dtype)
+
+
+def make_pack_fn(
+    pack: TablePack,
+    name: str,
+    *,
+    use_pallas: bool = True,
+    exact_d1=None,
+    extrapolate: bool = False,
+):
+    """Differentiable unary ``f(x)`` evaluated through the shared pack.
+
+    Mirrors ``repro.approx.make_table_fn``: table-slope tangent by default
+    (what the hardware computes), ``exact_d1`` for the analytic derivative.
+    ``use_pallas=True`` routes through the fused pack kernel (one selector pass
+    yields value AND slope on the training path).
+    """
+    fid = pack.fn_id(name)
+    if use_pallas:
+        from repro.kernels.table_pack_lookup import (
+            table_pack_grad_pallas, table_pack_lookup_pallas)
+
+        fwd_impl = lambda v: table_pack_lookup_pallas(
+            pack, fid, v, extrapolate=extrapolate)
+        fused_grad = lambda v: table_pack_grad_pallas(
+            pack, fid, v, extrapolate=extrapolate)
+    else:
+        fwd_impl = lambda v: eval_pack_ref(pack, fid, v, extrapolate=extrapolate)
+        fused_grad = None
+
+    @jax.custom_jvp
+    def f(x):
+        return fwd_impl(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        if exact_d1 is not None:
+            y = fwd_impl(x)
+            slope = exact_d1(x)
+        elif fused_grad is not None:
+            y, slope = fused_grad(x)
+        else:
+            y = fwd_impl(x)
+            slope = eval_pack_slope(pack, fid, x, extrapolate=extrapolate)
+        return y, slope * dx
+
+    return f

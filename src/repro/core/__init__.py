@@ -14,7 +14,8 @@ from .splitting import (
 )
 from .table import TableSpec, build_table
 from .flow import FlowReport, cached_table, run_flow
-from .bram import bram_count, bram_count_packed, vmem_cost
+from .bram import bram_count, bram_count_packed, vmem_cost, vmem_cost_pack
+from .packing import PackLayout, pack_layout
 from .quantize import FixedPointFormat, PAPER_FORMATS
 from .stats import TTestResult, outperforms, t_cdf, ttest2
 
@@ -23,6 +24,7 @@ __all__ = [
     "FixedPointFormat",
     "FlowReport",
     "FunctionSpec",
+    "PackLayout",
     "PAPER_FORMATS",
     "SecondDerivMax",
     "SplitResult",
@@ -39,6 +41,7 @@ __all__ = [
     "get_function",
     "hierarchical_split",
     "outperforms",
+    "pack_layout",
     "reference_spacing",
     "run_flow",
     "sequential_split",
@@ -46,4 +49,5 @@ __all__ = [
     "t_cdf",
     "ttest2",
     "vmem_cost",
+    "vmem_cost_pack",
 ]

@@ -72,8 +72,35 @@ def vmem_cost(
 ) -> VmemCost:
     """VMEM residency of a TableSpec inside the Pallas kernel."""
     table = footprint * dtype_bytes
-    # boundaries (n+1), inv_delta (n), base (n), seg_count (n) as f32/i32 lanes
+    # boundaries (n+1), inv_delta (n), base (n), seg_count (n) lanes; metadata
+    # is pinned as f32 whatever the entry width (agrees with memory_bytes).
     meta = (4 * n_intervals + 1) * 4
+    pad = VMEM_SUBLANE_BYTES
+    padded = math.ceil((table + meta) / pad) * pad
+    return VmemCost(table, meta, padded, budget_bytes)
+
+
+def vmem_cost_pack(
+    footprints,
+    n_intervals,
+    dtype_bytes: int = 4,
+    budget_bytes: int = VMEM_BYTES_V5E,
+) -> VmemCost:
+    """VMEM residency of a multi-function TablePack inside the fused kernel.
+
+    The pack concatenates every function's values into one vector and keeps the
+    selector metadata as padded (F, n_max) planes — boundaries (F, n_max+1),
+    inv_delta / base / seg_count (F, n_max each) — so the metadata cost is set by
+    the WIDEST member (n_max), not the sum of per-function pinnings.  One pack
+    replaces F separate (table + metadata) residencies and F kernel dispatches.
+    """
+    footprints = list(footprints)
+    n_list = list(n_intervals)
+    if len(footprints) != len(n_list) or not footprints:
+        raise ValueError("need one footprint and n_intervals per packed function")
+    n_max = max(n_list)
+    table = sum(footprints) * dtype_bytes
+    meta = len(footprints) * (4 * n_max + 1) * 4  # metadata pinned f32
     pad = VMEM_SUBLANE_BYTES
     padded = math.ceil((table + meta) / pad) * pad
     return VmemCost(table, meta, padded, budget_bytes)

@@ -52,8 +52,17 @@ class TableSpec:
         return int(len(self.values))
 
     def memory_bytes(self, dtype_bytes: int = 4) -> int:
-        """Table + selector metadata bytes (the VMEM cost of the runtime kernel)."""
-        meta = self.boundaries.size * 4 + (self.inv_delta.size + self.base.size) * 4
+        """Table + selector metadata bytes (the VMEM cost of the runtime kernel).
+
+        Counts every metadata lane the kernel pins — boundaries (n+1), inv_delta,
+        base AND seg_count (n each).  Metadata is always f32 at runtime
+        (``from_spec`` pins it as float32; ``base`` indices don't even fit
+        narrower types exactly), so it is charged at 4 bytes regardless of the
+        entry ``dtype_bytes`` — matching :func:`repro.core.bram.vmem_cost`
+        (regression-tested against it).
+        """
+        meta = (self.boundaries.size + self.inv_delta.size + self.base.size
+                + self.seg_count.size) * 4
         return self.footprint * dtype_bytes + meta
 
     # ---------------------------- numpy oracle ----------------------------------

@@ -5,8 +5,10 @@ from __future__ import annotations
 import jax
 
 from repro.approx.jax_table import JaxTable
+from repro.approx.table_pack import TablePack
 
 from .table_lookup import table_lookup_pallas
+from .table_pack_lookup import table_pack_lookup_pallas
 
 
 def table_lookup(jt: JaxTable, x: jax.Array, *, extrapolate: bool = False) -> jax.Array:
@@ -17,3 +19,14 @@ def table_lookup(jt: JaxTable, x: jax.Array, *, extrapolate: bool = False) -> ja
     table slope), matching the hardware's piecewise-linear semantics.
     """
     return table_lookup_pallas(jt, x, extrapolate=extrapolate)
+
+
+def table_pack_lookup(pack: TablePack, fn, x: jax.Array, *,
+                      extrapolate: bool = False) -> jax.Array:
+    """Fused lookup of member ``fn`` (name or fn_id) from the shared pack.
+
+    One VMEM-resident pack + one kernel body serve every member function; the
+    static ``fn_id`` only picks a metadata row.  Differentiability lives in
+    ``repro.approx.make_pack_fn``.
+    """
+    return table_pack_lookup_pallas(pack, fn, x, extrapolate=extrapolate)

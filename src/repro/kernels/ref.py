@@ -5,8 +5,15 @@ from __future__ import annotations
 import jax
 
 from repro.approx.jax_table import JaxTable, eval_table_ref
+from repro.approx.table_pack import TablePack, eval_pack_ref
 
 
 def table_lookup_ref(jt: JaxTable, x: jax.Array, *, extrapolate: bool = False) -> jax.Array:
     """Oracle for ``table_lookup``: identical math, plain jnp ops."""
     return eval_table_ref(jt, x, extrapolate=extrapolate)
+
+
+def table_pack_lookup_ref(pack: TablePack, fn, x: jax.Array, *,
+                          extrapolate: bool = False) -> jax.Array:
+    """Oracle for ``table_pack_lookup``: identical math, plain jnp ops."""
+    return eval_pack_ref(pack, fn, x, extrapolate=extrapolate)

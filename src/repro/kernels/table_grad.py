@@ -21,7 +21,8 @@ from jax.experimental import pallas as pl
 
 from repro.approx.jax_table import JaxTable
 
-from .table_lookup import DEFAULT_BLOCK_ROWS, LANE, _pinned
+from .table_lookup import (DEFAULT_BLOCK_ROWS, LANE, _pinned, select_params,
+                           tile_activations, untile_activations)
 
 
 def _table_grad_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref,
@@ -29,16 +30,9 @@ def _table_grad_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref,
                        extrapolate: bool):
     x = x_ref[...].astype(jnp.float32)
 
-    p = jnp.full_like(x, bounds_ref[0, 0])
-    invd = jnp.full_like(x, invd_ref[0, 0])
-    base = jnp.full_like(x, base_ref[0, 0])
-    segs = jnp.full_like(x, segs_ref[0, 0])
-    for m in range(1, n_intervals):
-        ge = (x >= bounds_ref[0, m]).astype(jnp.float32)
-        p = p + ge * (bounds_ref[0, m] - bounds_ref[0, m - 1])
-        invd = invd + ge * (invd_ref[0, m] - invd_ref[0, m - 1])
-        base = base + ge * (base_ref[0, m] - base_ref[0, m - 1])
-        segs = segs + ge * (segs_ref[0, m] - segs_ref[0, m - 1])
+    p, invd, base, segs = select_params(
+        x, bounds_ref[0, :], invd_ref[0, :], base_ref[0, :], segs_ref[0, :],
+        n_intervals)
 
     u = (x - p) * invd
     i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
@@ -96,16 +90,9 @@ def table_lookup_grad_pallas(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     shape = x.shape
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    rows = -(-n // lane)
-    block = min(block_rows, rows)
-    rows_pad = -(-rows // block) * block
-    pad = rows_pad * lane - n
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
+    x2d, block, n = tile_activations(x, lane, block_rows)
     y2d, dy2d = _call(
-        flat.reshape(rows_pad, lane),
+        x2d,
         jt.boundaries.reshape(1, -1),
         jt.inv_delta.reshape(1, -1),
         jt.base.reshape(1, -1),
@@ -114,5 +101,5 @@ def table_lookup_grad_pallas(
         block_rows=block, interpret=interpret,
         n_intervals=jt.n_intervals, extrapolate=extrapolate,
     )
-    unpad = lambda t: t.reshape(-1)[:n].reshape(shape)
-    return unpad(y2d), unpad(dy2d)
+    return (untile_activations(y2d, n, shape),
+            untile_activations(dy2d, n, shape))

@@ -7,11 +7,14 @@ This is the paper's Fig. 7 pipeline re-thought for the TPU memory hierarchy
     whole kernel** — the BRAM analogue.  BlockSpecs pin them with a constant index
     map so every grid step reuses the same VMEM copy; only activation tiles stream
     HBM→VMEM.
-  * the interval selector is a *comparator plane*: one vectorized ``x >= b_m``
-    compare per interior boundary, accumulated into the per-element sub-interval
-    parameters with FMAs.  The paper's binary comparator tree (and its LUT-count
-    versus #intervals tradeoff, Fig. 8b) has no TPU meaning — a VPU evaluates all
-    comparators at once.  n-1 unrolled compares, n = #sub-intervals (static).
+  * the interval selector is a *comparator plane*: ONE broadcast ``x >= bounds``
+    compare against the whole boundary row plus a sum-reduction yields the
+    sub-interval index j per element; the per-element parameters are then four
+    gathers from the VMEM metadata rows.  The paper's binary comparator tree
+    (and its LUT-count versus #intervals tradeoff, Fig. 8b) has no TPU meaning —
+    a VPU evaluates all comparators at once, and the gather replaces the old
+    n-1-deep unrolled FMA select chain (serial latency AND accumulated-rounding
+    drift) with O(1)-depth exact reads.
   * address generation uses precomputed reciprocals ``inv_delta`` (no divide on the
     VPU hot path) and float accumulators (exact for indices < 2^24).
   * the dual-port BRAM read of (y_i, y_{i+1}) becomes one adjacent-pair gather from
@@ -35,27 +38,39 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.approx.jax_table import JaxTable
+from repro.approx.jax_table import JaxTable, select_interval
 
 LANE = 512  # 4 VREG lanes worth of f32; amortizes control per vector op
 DEFAULT_BLOCK_ROWS = 256  # 256x512 f32 tile = 512 KiB in + 512 KiB out
+
+
+def select_params(x, bounds_row, invd_row, base_row, segs_row, n_intervals: int):
+    """Comparator plane + parameter fetch, shared by every table kernel.
+
+    The subtle part — broadcast compare + sum-reduction + clip — is the ONE
+    ``select_interval`` implementation shared with the jnp oracles, so the
+    kernel/oracle bit-identity holds by construction; this helper only adds
+    the four gathers from the VMEM-resident metadata rows.  ``bounds_row`` may
+    be right-padded (+inf in the multi-function pack plane): padding never
+    compares true and the clip pins out-of-range x into the last real
+    sub-interval.
+    """
+    j = select_interval(bounds_row, n_intervals, x)
+    p = jnp.take(bounds_row, j, axis=0, mode="clip")
+    invd = jnp.take(invd_row, j, axis=0, mode="clip")
+    base = jnp.take(base_row, j, axis=0, mode="clip")
+    segs = jnp.take(segs_row, j, axis=0, mode="clip")
+    return p, invd, base, segs
 
 
 def _table_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref, values_ref, o_ref,
                   *, n_intervals: int, extrapolate: bool):
     x = x_ref[...].astype(jnp.float32)
 
-    # --- interval selector + parameter mux (comparator plane, unrolled) ---------
-    p = jnp.full_like(x, bounds_ref[0, 0])
-    invd = jnp.full_like(x, invd_ref[0, 0])
-    base = jnp.full_like(x, base_ref[0, 0])
-    segs = jnp.full_like(x, segs_ref[0, 0])
-    for m in range(1, n_intervals):
-        ge = (x >= bounds_ref[0, m]).astype(jnp.float32)
-        p = p + ge * (bounds_ref[0, m] - bounds_ref[0, m - 1])
-        invd = invd + ge * (invd_ref[0, m] - invd_ref[0, m - 1])
-        base = base + ge * (base_ref[0, m] - base_ref[0, m - 1])
-        segs = segs + ge * (segs_ref[0, m] - segs_ref[0, m - 1])
+    # --- interval selector + parameter fetch (comparator plane + gathers) -------
+    p, invd, base, segs = select_params(
+        x, bounds_ref[0, :], invd_ref[0, :], base_ref[0, :], segs_ref[0, :],
+        n_intervals)
 
     # --- address generation (reciprocal multiply + floor + clamp) ---------------
     u = (x - p) * invd
@@ -78,6 +93,30 @@ def _table_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref, values_ref, o
 def _pinned(shape):
     """BlockSpec that keeps a whole operand resident in VMEM across grid steps."""
     return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+
+def tile_activations(x: jax.Array, lane: int, block_rows: int):
+    """Flatten + zero-pad an arbitrary tensor into an MXU/VPU-aligned 2D tiling.
+
+    Shared by every table kernel wrapper (per-table and pack) so the whole
+    subsystem pads exactly one way.  Returns ``(x2d, block, n)`` with
+    ``x2d: (rows_pad, lane)``, ``block`` the largest grid-dividing row block
+    <= ``block_rows``, and ``n`` the true element count for untiling.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // lane)
+    block = min(block_rows, rows)
+    rows_pad = -(-rows // block) * block
+    pad = rows_pad * lane - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows_pad, lane), block, n
+
+
+def untile_activations(out2d: jax.Array, n: int, shape) -> jax.Array:
+    """Inverse of :func:`tile_activations` for one kernel output."""
+    return out2d.reshape(-1)[:n].reshape(shape)
 
 
 @functools.partial(
@@ -120,16 +159,7 @@ def table_lookup_pallas(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     shape = x.shape
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    rows = -(-n // lane)
-    rows_pad = -(-rows // block_rows) * block_rows if rows > block_rows else rows
-    block = min(block_rows, rows_pad)
-    rows_pad = -(-rows_pad // block) * block
-    pad = rows_pad * lane - n
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    x2d = flat.reshape(rows_pad, lane)
+    x2d, block, n = tile_activations(x, lane, block_rows)
     out = _call(
         x2d,
         jt.boundaries.reshape(1, -1),
@@ -142,4 +172,4 @@ def table_lookup_pallas(
         n_intervals=jt.n_intervals,
         extrapolate=extrapolate,
     )
-    return out.reshape(-1)[:n].reshape(shape)
+    return untile_activations(out, n, shape)

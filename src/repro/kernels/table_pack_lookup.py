@@ -1,0 +1,182 @@
+"""Fused multi-function Pallas kernels over a :class:`repro.approx.TablePack`.
+
+One packed values vector + (F, n_max) metadata planes stay VMEM-resident —
+BRAM instantiation at the function-set level — and a single kernel body serves
+ANY member function: the static ``fn_id`` picks the metadata row at trace time
+(zero runtime cost; the row read lowers to a constant offset), then the shared
+comparator-plane selector (``table_lookup.select_params``) and adjacent-pair
+gather run exactly as in the per-table kernel.  Because every specialization
+shares the same operand shapes and the same pack arrays, switching functions
+costs one cached-executable lookup instead of a new table upload, and the VMEM
+working set is ONE pack instead of F separate tables.
+
+Two entry points mirror the per-table pair:
+
+  * ``table_pack_lookup_pallas``  — value only (serving path);
+  * ``table_pack_grad_pallas``    — fused value + slope in one selector pass
+    (training path; used by ``make_pack_fn``'s custom_jvp).
+
+Both validated bit-identical against ``repro.approx.table_pack.eval_pack_ref``
+/ ``eval_pack_slope`` in interpret mode (tests/test_table_pack.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.approx.table_pack import TablePack
+
+from .table_lookup import (DEFAULT_BLOCK_ROWS, LANE, _pinned, select_params,
+                           tile_activations, untile_activations)
+
+
+def _pack_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref, values_ref,
+                 o_ref, *, fn_id: int, n_intervals: int, extrapolate: bool):
+    x = x_ref[...].astype(jnp.float32)
+
+    # static row pick: the ONE pack serves any function; fn_id costs nothing
+    p, invd, base, segs = select_params(
+        x, bounds_ref[fn_id, :], invd_ref[fn_id, :], base_ref[fn_id, :],
+        segs_ref[fn_id, :], n_intervals)
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)  # base is GLOBAL: offset baked in at pack time
+
+    values = values_ref[0, :]
+    y0 = jnp.take(values, a, axis=0, mode="clip")
+    y1 = jnp.take(values, a + 1, axis=0, mode="clip")
+
+    t = u - i
+    if not extrapolate:
+        t = jnp.clip(t, 0.0, 1.0)
+    o_ref[...] = (y0 + t * (y1 - y0)).astype(o_ref.dtype)
+
+
+def _pack_grad_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref,
+                      values_ref, y_ref, dy_ref, *, fn_id: int,
+                      n_intervals: int, extrapolate: bool):
+    x = x_ref[...].astype(jnp.float32)
+
+    p, invd, base, segs = select_params(
+        x, bounds_ref[fn_id, :], invd_ref[fn_id, :], base_ref[fn_id, :],
+        segs_ref[fn_id, :], n_intervals)
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    values = values_ref[0, :]
+    y0 = jnp.take(values, a, axis=0, mode="clip")
+    y1 = jnp.take(values, a + 1, axis=0, mode="clip")
+
+    t = u - i
+    slope = (y1 - y0) * invd
+    if not extrapolate:
+        t = jnp.clip(t, 0.0, 1.0)
+        inside = ((x >= bounds_ref[fn_id, 0]) &
+                  (x < bounds_ref[fn_id, n_intervals])).astype(jnp.float32)
+        slope = slope * inside
+    y_ref[...] = (y0 + t * (y1 - y0)).astype(y_ref.dtype)
+    dy_ref[...] = slope.astype(dy_ref.dtype)
+
+
+def _pack_specs(x2d, pack_arrays, block_rows):
+    rows, lane = x2d.shape
+    in_specs = [pl.BlockSpec((block_rows, lane), lambda i: (i, 0))]
+    in_specs += [_pinned(a.shape) for a in pack_arrays]
+    return (rows // block_rows,), in_specs
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "fn_id", "n_intervals",
+                              "extrapolate"))
+def _call(x2d, bounds, invd, base, segs, values, *, block_rows, interpret,
+          fn_id, n_intervals, extrapolate):
+    grid, in_specs = _pack_specs(x2d, (bounds, invd, base, segs, values),
+                                 block_rows)
+    kernel = functools.partial(_pack_kernel, fn_id=fn_id,
+                               n_intervals=n_intervals, extrapolate=extrapolate)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_rows, x2d.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, bounds, invd, base, segs, values)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "fn_id", "n_intervals",
+                              "extrapolate"))
+def _call_grad(x2d, bounds, invd, base, segs, values, *, block_rows, interpret,
+               fn_id, n_intervals, extrapolate):
+    grid, in_specs = _pack_specs(x2d, (bounds, invd, base, segs, values),
+                                 block_rows)
+    kernel = functools.partial(_pack_grad_kernel, fn_id=fn_id,
+                               n_intervals=n_intervals, extrapolate=extrapolate)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((block_rows, x2d.shape[1]), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct(x2d.shape, x2d.dtype)] * 2,
+        interpret=interpret,
+    )(x2d, bounds, invd, base, segs, values)
+
+
+def _prep(pack: TablePack, fn, x, lane, block_rows, interpret):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fid = pack.fn_id(fn) if isinstance(fn, str) else int(fn)
+    x2d, block, n = tile_activations(x, lane, block_rows)
+    return fid, x2d, block, n, interpret
+
+
+def table_pack_lookup_pallas(
+    pack: TablePack,
+    fn,
+    x: jax.Array,
+    *,
+    extrapolate: bool = False,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Evaluate member ``fn`` (name or fn_id) of the pack over a tensor."""
+    fid, x2d, block, n, interpret = _prep(pack, fn, x, lane, block_rows,
+                                          interpret)
+    out = _call(
+        x2d, pack.boundaries, pack.inv_delta, pack.base, pack.seg_count,
+        pack.values.reshape(1, -1),
+        block_rows=block, interpret=interpret, fn_id=fid,
+        n_intervals=pack.n_intervals[fid], extrapolate=extrapolate,
+    )
+    return untile_activations(out, n, x.shape)
+
+
+def table_pack_grad_pallas(
+    pack: TablePack,
+    fn,
+    x: jax.Array,
+    *,
+    extrapolate: bool = False,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+):
+    """Returns (y, dy/dx) for member ``fn`` with one fused selector pass."""
+    fid, x2d, block, n, interpret = _prep(pack, fn, x, lane, block_rows,
+                                          interpret)
+    y2d, dy2d = _call_grad(
+        x2d, pack.boundaries, pack.inv_delta, pack.base, pack.seg_count,
+        pack.values.reshape(1, -1),
+        block_rows=block, interpret=interpret, fn_id=fid,
+        n_intervals=pack.n_intervals[fid], extrapolate=extrapolate,
+    )
+    return (untile_activations(y2d, n, x.shape),
+            untile_activations(dy2d, n, x.shape))

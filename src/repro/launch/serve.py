@@ -25,6 +25,14 @@ def main():
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--approx-mode",
+                    choices=["exact", "table_ref", "table_pallas", "table_pack",
+                             "table_pack_ref"],
+                    default=None,
+                    help="nonlinearity backend; table_pack = one fused "
+                         "multi-function pack + kernel for the whole network")
+    ap.add_argument("--approx-ea", type=float, default=None,
+                    help="override the config's error budget E_a")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -36,6 +44,16 @@ def main():
         from tests.test_archs import reduced
 
         cfg = reduced(args.arch)
+    if args.approx_mode is not None or args.approx_ea is not None:
+        import dataclasses
+
+        # override only what was passed; keep the config's other approx params
+        kw = {}
+        if args.approx_mode is not None:
+            kw["mode"] = args.approx_mode
+        if args.approx_ea is not None:
+            kw["e_a"] = args.approx_ea
+        cfg = cfg.replace(approx=dataclasses.replace(cfg.approx, **kw))
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
 

@@ -40,6 +40,14 @@ def main():
                     help="family-preserving shrink for CPU-scale runs")
     ap.add_argument("--mesh", choices=["none", "debug", "prod", "multipod"],
                     default="none")
+    ap.add_argument("--approx-mode",
+                    choices=["exact", "table_ref", "table_pallas", "table_pack",
+                             "table_pack_ref"],
+                    default=None,
+                    help="nonlinearity backend; table_pack = one fused "
+                         "multi-function pack + kernel for the whole network")
+    ap.add_argument("--approx-ea", type=float, default=None,
+                    help="override the config's error budget E_a")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -49,6 +57,16 @@ def main():
         sys.path.insert(0, os.path.join(os.path.dirname(__file__),
                                         "..", "..", ".."))
         cfg = reduced_config(cfg)
+    if args.approx_mode is not None or args.approx_ea is not None:
+        import dataclasses
+
+        # override only what was passed; keep the config's other approx params
+        kw = {}
+        if args.approx_mode is not None:
+            kw["mode"] = args.approx_mode
+        if args.approx_ea is not None:
+            kw["e_a"] = args.approx_ea
+        cfg = cfg.replace(approx=dataclasses.replace(cfg.approx, **kw))
     model = build_model(cfg)
 
     mesh = None

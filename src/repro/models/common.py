@@ -96,5 +96,24 @@ def sinusoidal_positions(n: int, d: int) -> jax.Array:
     return jnp.asarray(emb, dtype=jnp.float32)
 
 
-def softcap(x: jax.Array, cap: float) -> jax.Array:
-    return cap * jnp.tanh(x / cap) if cap > 0 else x
+def odd_extension(fn):
+    """Extend an odd function's negative-half approximator to all reals.
+
+    The paper tables tanh on its Table-2 interval [-8, 0); gates and softcap
+    need both signs.  For odd f, f(x) = -f(-|x|) * sign(x) reuses the same
+    table with zero extra entries (the BRAM-side trick behind sigmoid_sym).
+    """
+    return lambda x: -fn(-jnp.abs(x)) * jnp.sign(x)
+
+
+def softcap(x: jax.Array, cap: float, tanh_fn=None) -> jax.Array:
+    """Soft logit cap ``cap * tanh(x / cap)``.
+
+    ``tanh_fn`` lets the caller route the tanh through the approx backend (the
+    table / TablePack runtimes) instead of the exact transcendental — models
+    pass ``cfg.approx.unary("tanh")`` when a table mode is active.
+    """
+    if cap <= 0:
+        return x
+    t = jnp.tanh if tanh_fn is None else tanh_fn
+    return cap * t(x / cap)

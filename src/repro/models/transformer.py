@@ -43,6 +43,7 @@ from .common import (
     init_linear,
     init_rmsnorm,
     linear,
+    odd_extension,
     rmsnorm,
     sinusoidal_positions,
     softcap,
@@ -96,6 +97,12 @@ class BaseLM:
         self.cfg = cfg
         self.dtype = jnp.dtype(cfg.compute_dtype)
         self.act = cfg.approx.unary(cfg.act)
+        # Route the final-logit softcap tanh through the approx backend too (in
+        # table/pack modes the tanh table only spans the paper's [-8, 0), so
+        # extend it oddly); exact mode keeps jnp.tanh via softcap's default.
+        self._cap_tanh = None
+        if cfg.approx.mode != "exact" and cfg.attn.logit_softcap > 0:
+            self._cap_tanh = odd_extension(cfg.approx.unary("tanh"))
 
     def loss(self, params, batch):
         logits, aux = self.train_logits(params, batch)
@@ -104,7 +111,7 @@ class BaseLM:
     def _logits(self, params, x):
         x = rmsnorm(params["final_norm"], x)
         logits = unembed(params.get("unembed", params["embed"]), x)
-        logits = softcap(logits, self.cfg.attn.logit_softcap)
+        logits = softcap(logits, self.cfg.attn.logit_softcap, self._cap_tanh)
         if self.cfg.vocab_pad != self.cfg.vocab:  # mask padded vocab rows
             pad_mask = (jax.lax.broadcasted_iota(
                 jnp.int32, logits.shape, logits.ndim - 1) < self.cfg.vocab)

@@ -51,29 +51,40 @@ class DecodeEngine:
         return jax.random.categorical(sub, logits / self.temperature, axis=-1)
 
     def generate_batch(self, prompts: np.ndarray, max_new: int,
-                       eos_id: int = -1, extra_inputs: Optional[dict] = None):
-        """prompts: (B, S) int32, right-aligned equal length (caller pads)."""
+                       eos_id=-1, extra_inputs: Optional[dict] = None):
+        """prompts: (B, S) int32, right-aligned equal length (caller pads).
+
+        ``eos_id`` is a scalar applied to the whole batch or a (B,) vector of
+        per-slot EOS ids (-1: that slot never stops early).  Returns
+        ``(tokens, steps)`` where ``steps`` counts every sampled token,
+        including the one sampled from the prefill logits.
+        """
         B, S = prompts.shape
         assert B == self.B
+        eos = np.broadcast_to(np.asarray(eos_id, np.int64), (B,))
         cache = self.model.init_cache(B, self.cache_len)
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if extra_inputs:
             batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
         logits, cache = self._prefill(self.params, batch, cache)
         out = [self._sample(logits)]
+        # only force a device->host sync per step when some slot can stop early
+        has_eos = bool((eos >= 0).any())
         done = np.zeros((B,), bool)
-        steps = 0
+        if has_eos:
+            done = (eos >= 0) & (np.asarray(out[0]) == eos)
+        steps = 1  # the prefill logits already yielded one token
         for i in range(max_new - 1):
+            if has_eos and done.all():
+                break
             tok = out[-1][:, None].astype(jnp.int32)
             logits, cache = self._step(self.params, tok,
                                        jnp.asarray(S + i, jnp.int32), cache)
             nxt = self._sample(logits)
             out.append(nxt)
             steps += 1
-            if eos_id >= 0:
-                done |= np.asarray(nxt) == eos_id
-                if done.all():
-                    break
+            if has_eos:
+                done |= (eos >= 0) & (np.asarray(nxt) == eos)
         return np.stack([np.asarray(t) for t in out], axis=1), steps
 
 
@@ -99,7 +110,7 @@ def serve(model, params, requests: List[Request], batch_size: int,
     results: List[Result] = []
     for group, toks in pad_and_batch(requests, batch_size):
         max_new = max(r.max_new_tokens for r in group)
-        eos = group[0].eos_id
+        eos = np.asarray([r.eos_id for r in group], np.int64)
         gen, steps = engine.generate_batch(toks, max_new, eos)
         for i, r in enumerate(group):
             results.append(Result(tokens=gen[i, : r.max_new_tokens],

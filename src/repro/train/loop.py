@@ -73,7 +73,7 @@ def make_train_step(model, opt_cfg: adamw.AdamWConfig, accum: int = 1,
     reshards each microbatch's bf16 work-layout grads straight into the f32
     master layout for accumulation — so the carried grad buffer is the SMALL
     (fully-sharded) one, and per-micro residuals die with their micro iteration
-    (grad-inside-scan, not loss-inside-scan: the latter keeps every micro's
+    (grad-inside-loop, not loss-inside-loop: the latter keeps every micro's
     remat carries live until the combined backward — measured +112 GB on
     yi-34b).  This is what lets >30B models keep f32 AdamW on 16 GB chips."""
 
@@ -103,19 +103,29 @@ def make_train_step(model, opt_cfg: adamw.AdamWConfig, accum: int = 1,
             loss, gw = jax.value_and_grad(loss_of)(pw, batch)
             grads = _to_master(gw)
         else:
-            def micro(carry, mb):
-                l, gw = jax.value_and_grad(loss_of)(pw, mb)
-                gm = _to_master(gw)
-                return (carry[0] + l, jax.tree.map(jnp.add, carry[1], gm)), None
-
+            # Each microbatch is scaled by 1/accum BEFORE accumulation so the
+            # carried loss/grad magnitudes match the accum=1 path step for step
+            # (sum-then-divide overflows bf16 carries at large accum and drifts
+            # from the accum=1 trajectory).  The loop is unrolled rather than a
+            # lax.scan: scan always compiles its body, so an eager accum=1 step
+            # and a scanned accum=N step go through different XLA rewrites and
+            # their bf16 backward passes diverge beyond fp-noise (seen as 2*lr
+            # sign-flip deltas after one AdamW step); unrolled, both paths share
+            # the same per-microbatch subgraphs.  accum is small (<= ~8), so the
+            # unrolled trace stays cheap, and the sequential data dependence
+            # through the accumulator keeps per-micro residuals short-lived.
             micro_batches = jax.tree.map(
                 lambda t: t.reshape(accum, t.shape[0] // accum, *t.shape[1:]),
                 batch)
-            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (loss, grads), _ = jax.lax.scan(micro, (jnp.zeros((), jnp.float32),
-                                                    zero), micro_batches)
-            loss = loss / accum
-            grads = jax.tree.map(lambda g: g / accum, grads)
+            inv = 1.0 / accum
+            loss = jnp.zeros((), jnp.float32)
+            grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            for a in range(accum):
+                mb = jax.tree.map(lambda t: t[a], micro_batches)
+                l, gw = jax.value_and_grad(loss_of)(pw, mb)
+                gm = _to_master(gw)
+                loss = loss + l * inv
+                grads = jax.tree.map(lambda acc, g: acc + g * inv, grads, gm)
         new_params, new_opt, metrics = adamw.update(opt_cfg, params, grads,
                                                     state["opt"])
         metrics["loss"] = loss

@@ -56,6 +56,7 @@ def make_batch(cfg, B=2, S=16, rng_seed=0):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 class TestArchSmoke:
     def test_forward_and_train_step(self, arch_id):
@@ -94,6 +95,7 @@ class TestArchSmoke:
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ["stablelm-3b", "gemma3-12b", "zamba2-1.2b",
                                      "xlstm-125m", "whisper-small", "yi-34b"])
 def test_decode_matches_teacher_forcing(arch_id):
@@ -179,6 +181,7 @@ def test_param_count_sanity():
     assert 1.2e10 < ds < 2.2e10, ds
 
 
+@pytest.mark.slow
 def test_chunked_prefill_matches_full():
     """prefill_chunked (O(chunk) memory) must equal one-shot prefill."""
     cfg = reduced("stablelm-3b")

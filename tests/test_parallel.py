@@ -46,6 +46,7 @@ model = build_model(cfg)
 """
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs_and_matches_single_device():
     out = run_subprocess(PREAMBLE + """
 batch = make_batch(cfg, B=8, S=16)
@@ -79,6 +80,7 @@ print("SHARDED_STEP_OK")
     assert "SHARDED_STEP_OK" in out
 
 
+@pytest.mark.slow
 def test_elastic_checkpoint_restore_across_meshes(tmp_path):
     out = run_subprocess(PREAMBLE + f"""
 from repro.train import CheckpointManager
@@ -108,6 +110,7 @@ print("ELASTIC_OK")
     assert "ELASTIC_OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_loss_equals_unsharded_loss():
     """Pure sharding change must not change the math (exact same fwd graph)."""
     out = run_subprocess(PREAMBLE + """
@@ -126,6 +129,7 @@ print("LOSS_MATCH_OK")
     assert "LOSS_MATCH_OK" in out
 
 
+@pytest.mark.slow
 def test_decode_sharded_matches_unsharded():
     out = run_subprocess(PREAMBLE + """
 from repro.parallel.cache_specs import cache_pspecs

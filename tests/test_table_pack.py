@@ -1,0 +1,254 @@
+"""TablePack validation: the fused multi-function pack must reproduce the
+per-table runtimes bit for bit (same f32 compare/gather/FMA sequence on the
+same values; the pack only rebases BRAM addresses), one pallas_call must serve
+any member function, and the pack/table memory accountings must agree."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx import ApproxConfig, eval_table_ref, eval_table_slope, from_spec, pack_specs
+from repro.approx.table_pack import eval_pack_ref, eval_pack_slope
+from repro.core import (
+    build_table,
+    function_names,
+    pack_layout,
+    vmem_cost,
+    vmem_cost_pack,
+)
+from repro.kernels.ops import table_lookup, table_pack_lookup
+from repro.kernels.table_pack_lookup import table_pack_grad_pallas, table_pack_lookup_pallas
+
+RNG = np.random.default_rng(7)
+
+EA = 1e-4
+
+
+def _specs(names, ea=EA):
+    return [build_table(n, ea, algorithm="hierarchical", omega=0.2) for n in names]
+
+
+def _probe(spec, n=2048):
+    """Inputs spanning the table domain plus deep out-of-range tails."""
+    lo, hi, span = spec.lo, spec.hi, spec.hi - spec.lo
+    return jnp.asarray(
+        RNG.uniform(lo - 0.5 * span, hi + 0.5 * span, size=n).astype(np.float32))
+
+
+class TestPackParity:
+    """Pack evaluation == per-table evaluation, bitwise, for EVERY registered
+    function — including out-of-range saturation (the address clamp) and the
+    extrapolate=True edge-segment semantics."""
+
+    def test_bit_identical_to_per_table_ref(self):
+        names = function_names()
+        specs = _specs(names)
+        pack = pack_specs(specs)
+        for name, spec in zip(names, specs):
+            jt = from_spec(spec)
+            x = _probe(spec)
+            for ex in (False, True):
+                want = jax.jit(
+                    lambda v, jt=jt, ex=ex: eval_table_ref(jt, v, extrapolate=ex))(x)
+                got = jax.jit(
+                    lambda v, n=name, ex=ex: eval_pack_ref(pack, n, v,
+                                                           extrapolate=ex))(x)
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(want), err_msg=f"{name} ex={ex}")
+
+    def test_slope_bit_identical(self):
+        names = function_names()
+        specs = _specs(names)
+        pack = pack_specs(specs)
+        for name, spec in zip(names, specs):
+            jt = from_spec(spec)
+            x = _probe(spec, n=1024)
+            for ex in (False, True):
+                want = jax.jit(
+                    lambda v, jt=jt, ex=ex: eval_table_slope(jt, v, extrapolate=ex))(x)
+                got = jax.jit(
+                    lambda v, n=name, ex=ex: eval_pack_slope(pack, n, v,
+                                                             extrapolate=ex))(x)
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(want), err_msg=f"{name} ex={ex}")
+
+    def test_matches_tablespec_oracle(self):
+        """Pack eval tracks the f64 numpy oracle at f32 resolution in-domain."""
+        names = ["gelu", "tanh", "exp_neg"]
+        specs = _specs(names)
+        pack = pack_specs(specs)
+        for name, spec in zip(names, specs):
+            xs = np.linspace(spec.lo, spec.hi - 1e-4, 4001)
+            want = spec.eval(xs)
+            got = np.asarray(eval_pack_ref(pack, name,
+                                           jnp.asarray(xs, jnp.float32)))
+            scale = max(1.0, float(np.max(np.abs(want))))
+            assert float(np.max(np.abs(got - want))) <= 1e-5 * scale, name
+
+    def test_saturation_and_extrapolation_semantics(self):
+        spec = _specs(["gelu"])[0]
+        pack = pack_specs([spec])
+        far = jnp.asarray([spec.lo - 50.0, spec.hi + 50.0], jnp.float32)
+        sat = np.asarray(eval_pack_ref(pack, "gelu", far))
+        # clamp: pinned to the edge breakpoint values
+        np.testing.assert_allclose(sat, [spec.values[0], spec.values[-1]],
+                                   rtol=1e-6)
+        ext = np.asarray(eval_pack_ref(pack, "gelu", far, extrapolate=True))
+        # linear tails: gelu(x) ~ 0 for x << 0 and ~ x for x >> 0
+        assert abs(ext[0]) < 1e-2 and abs(ext[1] - (spec.hi + 50.0)) < 1e-2
+
+
+class TestPackKernel:
+    def test_one_pack_call_serves_many_functions(self):
+        """Acceptance: ONE TablePack pallas_call (interpret off-TPU) serves >= 2
+        distinct functions from a single packed values vector, bit-identical to
+        the per-table oracle under jit."""
+        names = ["gelu", "tanh", "sigmoid_sym", "exp_neg"]
+        specs = _specs(names)
+        pack = pack_specs(specs)
+        x = jnp.asarray(RNG.normal(0, 5, size=(3, 257)).astype(np.float32))
+        for name, spec in zip(names, specs):
+            jt = from_spec(spec)
+            want = jax.jit(lambda v, jt=jt: eval_table_ref(jt, v))(x)
+            got = table_pack_lookup(pack, name, x)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                          err_msg=name)
+            # and the pack kernel == the per-table kernel, bitwise
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(table_lookup(jt, x)),
+                                          err_msg=f"{name} vs per-table kernel")
+
+    @pytest.mark.parametrize("shape", [(8,), (513,), (4, 96), (2, 3, 257),
+                                       (16, 1024)])
+    def test_shapes(self, shape):
+        pack = pack_specs(_specs(["silu", "tanh"]))
+        x = jnp.asarray(RNG.normal(0, 5, size=shape).astype(np.float32))
+        for name in ("silu", "tanh"):
+            got = table_pack_lookup(pack, name, x)
+            want = jax.jit(lambda v, n=name: eval_pack_ref(pack, n, v))(x)
+            assert got.shape == x.shape and got.dtype == x.dtype
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_block_geometry_sweep(self):
+        pack = pack_specs(_specs(["silu", "gelu"]))
+        x = jnp.asarray(RNG.normal(0, 5, size=(5000,)).astype(np.float32))
+        want = jax.jit(lambda v: eval_pack_ref(pack, "silu", v))(x)
+        for block_rows, lane in [(8, 128), (32, 256), (256, 512), (1024, 128)]:
+            got = table_pack_lookup_pallas(pack, "silu", x,
+                                           block_rows=block_rows, lane=lane)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fused_grad_kernel(self):
+        names = ["gelu", "tanh"]
+        pack = pack_specs(_specs(names))
+        x = jnp.asarray(RNG.normal(0, 4, size=(7, 193)).astype(np.float32))
+        for name, ex in [("gelu", True), ("tanh", False)]:
+            y, dy = table_pack_grad_pallas(pack, name, x, extrapolate=ex)
+            np.testing.assert_array_equal(
+                np.asarray(y),
+                np.asarray(jax.jit(
+                    lambda v, n=name, e=ex: eval_pack_ref(pack, n, v,
+                                                          extrapolate=e))(x)))
+            np.testing.assert_array_equal(
+                np.asarray(dy),
+                np.asarray(jax.jit(
+                    lambda v, n=name, e=ex: eval_pack_slope(pack, n, v,
+                                                            extrapolate=e))(x)))
+
+    def test_unknown_function_raises(self):
+        pack = pack_specs(_specs(["gelu"]))
+        with pytest.raises(KeyError):
+            pack.fn_id("log")
+
+
+class TestApproxConfigPackMode:
+    def test_unary_and_grad_match_table_ref(self):
+        cfg_pack = ApproxConfig(mode="table_pack", e_a=EA, omega=0.2)
+        cfg_ref = ApproxConfig(mode="table_ref", e_a=EA, omega=0.2)
+        x = jnp.asarray(RNG.normal(0, 4, size=(300,)).astype(np.float32))
+        for name in ("gelu", "silu", "tanh", "sigmoid", "exp", "softplus"):
+            a = np.asarray(jax.jit(cfg_pack.unary(name))(x))
+            b = np.asarray(jax.jit(cfg_ref.unary(name))(x))
+            np.testing.assert_array_equal(a, b, err_msg=name)
+            ga = np.asarray(jax.vmap(jax.grad(cfg_pack.unary(name)))(x))
+            gb = np.asarray(jax.vmap(jax.grad(cfg_ref.unary(name)))(x))
+            np.testing.assert_array_equal(ga, gb, err_msg=f"{name} grad")
+
+    def test_pack_is_shared_across_unary_calls(self):
+        cfg = ApproxConfig(mode="table_pack", e_a=EA, omega=0.2)
+        assert cfg.pack() is cfg.pack()
+        f1, f2 = cfg.unary("gelu"), cfg.unary("tanh")  # both trace fine
+        x = jnp.ones((8,), jnp.float32)
+        assert np.isfinite(np.asarray(f1(x))).all()
+        assert np.isfinite(np.asarray(f2(x))).all()
+
+    def test_missing_pack_member_raises(self):
+        cfg = ApproxConfig(mode="table_pack", e_a=EA,
+                           pack_functions=("gelu",))
+        with pytest.raises(KeyError):
+            cfg.unary("tanh")
+
+    def test_pack_softmax(self):
+        cfg = ApproxConfig(mode="table_pack", e_a=1e-6, softmax_table=True)
+        x = jnp.asarray(RNG.normal(0, 4, size=(8, 128)).astype(np.float32))
+        sm = cfg.softmax(x)
+        np.testing.assert_allclose(np.asarray(sm.sum(-1)), 1.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sm),
+                                   np.asarray(jax.nn.softmax(x)), atol=5e-4)
+
+
+class TestMemoryAccounting:
+    def test_table_memory_bytes_agrees_with_vmem_cost(self):
+        """Regression: TableSpec.memory_bytes must count the same lanes (incl.
+        seg_count) at the same width as bram.vmem_cost."""
+        for name in ("gelu", "tanh", "log"):
+            spec = build_table(name, EA, algorithm="hierarchical", omega=0.2)
+            for db in (2, 4, 8):
+                c = vmem_cost(spec.footprint, spec.n_intervals, dtype_bytes=db)
+                assert spec.memory_bytes(db) == c.table_bytes + c.meta_bytes, (
+                    name, db)
+
+    def test_pack_cost_vs_per_table(self):
+        specs = _specs(["gelu", "silu", "tanh", "sigmoid_sym", "exp_neg"])
+        layout = pack_layout(specs)
+        c = vmem_cost_pack([s.footprint for s in specs],
+                           [s.n_intervals for s in specs])
+        assert c.table_bytes == sum(s.footprint for s in specs) * 4
+        assert layout.vmem().padded_bytes == c.padded_bytes
+        per_table = sum(vmem_cost(s.footprint, s.n_intervals).padded_bytes
+                        for s in specs)
+        assert c.padded_bytes <= per_table  # one residency beats F paddings
+
+    def test_vmem_cost_pack_validates(self):
+        with pytest.raises(ValueError):
+            vmem_cost_pack([], [])
+        with pytest.raises(ValueError):
+            vmem_cost_pack([10, 20], [2])
+
+
+class TestPackLayout:
+    def test_values_concatenation_and_offsets(self):
+        specs = _specs(["gelu", "tanh", "exp_neg"])
+        layout = pack_layout(specs)
+        acc = 0
+        for f, s in enumerate(specs):
+            assert layout.value_offset[f] == acc
+            np.testing.assert_array_equal(
+                layout.values[acc : acc + s.footprint], s.values)
+            n = s.n_intervals
+            np.testing.assert_array_equal(layout.base[f, :n], s.base + acc)
+            np.testing.assert_array_equal(layout.boundaries[f, : n + 1],
+                                          s.boundaries)
+            assert np.all(np.isinf(layout.boundaries[f, n + 1 :]))
+            acc += s.footprint
+        assert layout.footprint == acc
+
+    def test_duplicate_names_rejected(self):
+        s = _specs(["gelu"])[0]
+        with pytest.raises(ValueError):
+            pack_layout([s, s])
+
+    def test_empty_pack_rejected(self):
+        with pytest.raises(ValueError):
+            pack_layout([])
