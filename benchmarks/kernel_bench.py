@@ -9,6 +9,8 @@ traffic)."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import List
 
@@ -18,6 +20,10 @@ import numpy as np
 
 from repro.approx import ApproxConfig
 from repro.core import build_table
+
+BENCH_QUANTPACK_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_quantpack.json")
 
 
 def _time(f, *args, reps=20) -> float:
@@ -106,3 +112,118 @@ def pack_dispatch_bench(size: int = 1 << 18) -> List[tuple]:
     print(f"[pack] {len(names)} fns: pack={tp:8.1f}us  per-table={tt:8.1f}us  "
           f"({tt / tp:.2f}x)  VMEM {vm_tabs} -> {vm_pack} B")
     return rows
+
+
+def quantpack_bench(size: int = 1 << 18, e_a: float = 1e-4,
+                    out_path: str = BENCH_QUANTPACK_JSON) -> List[tuple]:
+    """QuantPack footprint/latency report -> BENCH_quantpack.json.
+
+    Builds the DEFAULT_PACK_FUNCTIONS pack four ways at the same Ea — f32
+    entries, forced int16, forced int8, and the budget splitter's auto
+    selection — and records for each the entry-storage bytes (the paper's
+    M_F footprint axis), the metadata bytes, the total VMEM residency, and
+    the fused-kernel dispatch latency on this host.  The acceptance headline
+    is ``footprint_reduction_vs_f32``: stored-entry bytes vs the f32 pack at
+    equal error budget (the quantized packs keep the end-to-end |f - table|
+    <= Ea contract; see docs/quantpack.md for the budget split).
+    """
+    from repro.approx import DEFAULT_PACK_FUNCTIONS, build_pack, from_quant_layout
+    from repro.core import plan_quant_member, quant_pack_layout, vmem_cost_pack
+    from repro.core.flow import cached_table
+    from repro.kernels.ops import quant_pack_lookup, table_pack_lookup
+
+    names = DEFAULT_PACK_FUNCTIONS
+    x = jnp.asarray(np.random.default_rng(3).normal(0, 3, size).astype(np.float32))
+    report = {"e_a": e_a, "functions": list(names), "probe_size": size,
+              "packs": {}}
+
+    f32_pack = build_pack(names, e_a)
+    specs = [cached_table(n, e_a) for n in names]
+    c = vmem_cost_pack([s.footprint for s in specs],
+                       [s.n_intervals for s in specs])
+    t_f32 = _time(lambda v: table_pack_lookup(f32_pack, "silu", v), x)
+    report["packs"]["f32"] = {
+        "footprint_entries": f32_pack.footprint,
+        "footprint_bytes": f32_pack.footprint * 4,
+        "meta_bytes": c.meta_bytes,
+        "vmem_padded_bytes": c.padded_bytes,
+        "dispatch_us": round(t_f32, 1),
+    }
+
+    for label, dtype in (("int16", "int16"), ("int8", "int8"),
+                         ("auto", "auto")):
+        layout = quant_pack_layout(
+            [plan_quant_member(n, e_a, dtype=dtype) for n in names])
+        qp = from_quant_layout(layout)
+        cq = layout.vmem()
+        tq = _time(lambda v, q=qp: quant_pack_lookup(q, "silu", v), x)
+        report["packs"][label] = {
+            "entry_bits": dict(zip(layout.names, layout.entry_bits)),
+            "footprint_entries": layout.footprint,
+            "footprint_bytes": layout.footprint_bytes,
+            "meta_bytes": layout.meta_bytes,
+            "vmem_padded_bytes": cq.padded_bytes,
+            "dispatch_us": round(tq, 1),
+        }
+
+    f32_bytes = report["packs"]["f32"]["footprint_bytes"]
+    f32_vmem = report["packs"]["f32"]["vmem_padded_bytes"]
+    report["footprint_reduction_vs_f32"] = {
+        k: round(f32_bytes / v["footprint_bytes"], 2)
+        for k, v in report["packs"].items() if k != "f32"
+    }
+    # entry storage is the headline (the paper's M_F axis), but refinement buys
+    # int8 feasibility with metadata — report the total-residency ratio too so
+    # the tradeoff is visible (int16 can win this one at loose Ea)
+    report["vmem_reduction_vs_f32"] = {
+        k: round(f32_vmem / v["vmem_padded_bytes"], 2)
+        for k, v in report["packs"].items() if k != "f32"
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+    rows = []
+    for k, v in report["packs"].items():
+        rows.append((f"kernel.quantpack.{k}.footprint_bytes",
+                     v["footprint_bytes"],
+                     f"dispatch={v['dispatch_us']}us meta={v['meta_bytes']}B"))
+        print(f"[quantpack] {k:5s} footprint={v['footprint_bytes']:6d}B "
+              f"meta={v['meta_bytes']:5d}B dispatch={v['dispatch_us']:8.1f}us")
+    for k, r in report["footprint_reduction_vs_f32"].items():
+        rv = report["vmem_reduction_vs_f32"][k]
+        rows.append((f"kernel.quantpack.{k}.reduction_vs_f32", r,
+                     f"Ea={e_a:g} vmem_reduction={rv}x"))
+        print(f"[quantpack] {k:5s} reduction vs f32: {r:.2f}x entries, "
+              f"{rv:.2f}x total VMEM")
+    print(f"[quantpack] report -> {out_path}")
+    return rows
+
+
+def main() -> None:
+    """CLI for the CI smoke step: ``python -m benchmarks.kernel_bench --quantpack``."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quantpack", action="store_true",
+                    help="emit BENCH_quantpack.json (footprint + latency)")
+    ap.add_argument("--size", type=int, default=1 << 18,
+                    help="probe tensor size (use small values for CI smoke)")
+    ap.add_argument("--ea", type=float, default=1e-4)
+    ap.add_argument("--out", default=BENCH_QUANTPACK_JSON)
+    args = ap.parse_args()
+    if args.quantpack:
+        rows = quantpack_bench(args.size, args.ea, args.out)
+        red = [r for name, r, _ in rows
+               if name == "kernel.quantpack.auto.reduction_vs_f32"]
+        if red and red[0] < 2.0:
+            raise SystemExit(
+                f"auto quant pack reduction {red[0]}x < 2x vs f32 at equal Ea")
+    else:
+        activation_bench(args.size)
+        interval_count_flatness()
+        pack_dispatch_bench(args.size)
+
+
+if __name__ == "__main__":
+    main()

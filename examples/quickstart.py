@@ -5,6 +5,8 @@
 3. Resource models: BRAM18 packing + TPU VMEM packing            (paper Sec. 7)
 4. The runtime: pure-jnp oracle, the Pallas kernel (interpret mode on CPU),
    the differentiable activation wrapper, and the error-bound check.
+5. QuantPack: the error budget split between interpolation and int8/int16
+   code rounding, with the dequantize-on-read kernel still inside Ea.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -74,4 +76,25 @@ gelu = cfg.unary("gelu")
 g = jax.grad(lambda v: gelu(v).sum())(jnp.linspace(-3, 3, 16))
 print(f"table-GELU gradient via custom_jvp (slope rule): "
       f"{np.round(np.asarray(g[:4]), 3).tolist()} ...")
+
+print("\n=== 5. QuantPack: error-budgeted int8/int16 entries ===")
+from repro.approx import build_quant_pack, eval_quant_pack_ref
+from repro.core import build_table, get_function
+
+QNAMES = ("gelu", "tanh", "sigmoid_sym")
+QEA = 1e-4
+qpack = build_quant_pack(QNAMES, QEA)  # interp gets 0.9*Ea, rounding 0.1*Ea
+f32_bytes = 4 * sum(build_table(n, QEA, algorithm="hierarchical",
+                                omega=0.3).footprint for n in QNAMES)
+print(f"per-function width from the budget split: "
+      f"{dict(zip(qpack.names, qpack.entry_bits))}")
+print(f"entry storage: {qpack.footprint_bytes} B quantized vs {f32_bytes} B "
+      f"f32 ({f32_bytes / qpack.footprint_bytes:.1f}x smaller)")
+for name in QNAMES:
+    fn = get_function(name)
+    xs = jnp.asarray(np.linspace(*fn.interval, 4001)[:-1].astype(np.float32))
+    err = float(jnp.max(jnp.abs(
+        eval_quant_pack_ref(qpack, name, xs)
+        - jnp.asarray(fn.f(np.asarray(xs, np.float64))))))
+    print(f"  {name:12s} dequantize-on-read max err = {err:.2e} <= Ea = {QEA}")
 print("\nquickstart OK")

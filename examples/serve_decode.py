@@ -22,7 +22,7 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--mode", default="table_ref",
                     choices=["exact", "table_ref", "table_pallas", "table_pack",
-                             "table_pack_ref"])
+                             "table_pack_ref", "quant_pack", "quant_pack_ref"])
     args = ap.parse_args()
 
     cfg = get_config("gemma3-12b").replace(

@@ -1,13 +1,25 @@
 """repro.approx — JAX runtime of the paper's table-based function approximation."""
 
-from .activations import DEFAULT_PACK_FUNCTIONS, EXACT, ApproxConfig, get_exact
+from .activations import (
+    DEFAULT_PACK_FUNCTIONS,
+    EXACT,
+    ApproxConfig,
+    get_exact,
+    odd_extension,
+)
 from .jax_table import JaxTable, eval_table_ref, eval_table_slope, from_spec, make_table_fn
 from .table_pack import (
+    QuantTablePack,
     TablePack,
     build_pack,
+    build_quant_pack,
     eval_pack_ref,
     eval_pack_slope,
+    eval_quant_pack_ref,
+    eval_quant_pack_slope,
+    from_quant_layout,
     make_pack_fn,
+    make_quant_pack_fn,
     pack_specs,
 )
 
@@ -16,15 +28,19 @@ __all__ = [
     "EXACT",
     "ApproxConfig",
     "JaxTable",
+    "QuantTablePack",
     "TablePack",
     "build_pack",
+    "build_quant_pack",
     "eval_pack_ref",
     "eval_pack_slope",
-    "eval_table_ref",
-    "eval_table_slope",
-    "from_spec",
+    "eval_quant_pack_ref",
+    "eval_quant_pack_slope",
+    "from_quant_layout",
     "get_exact",
     "make_pack_fn",
+    "make_quant_pack_fn",
     "make_table_fn",
+    "odd_extension",
     "pack_specs",
 ]

@@ -2,7 +2,9 @@
 ``exact`` (jnp transcendentals), ``table_ref`` (paper-faithful jnp table),
 ``table_pallas`` (fused VMEM kernel, one table per function), ``table_pack``
 (ONE packed multi-function artifact + one fused kernel for the whole network),
-or ``table_pack_ref`` (the pack's jnp oracle).  Configured per-model via
+``table_pack_ref`` (the pack's jnp oracle), ``quant_pack`` (the pack with
+int8/int16 entry codes + dequantize-on-read kernels), or ``quant_pack_ref``
+(the quantized pack's jnp oracle).  Configured per-model via
 :class:`ApproxConfig`.
 """
 
@@ -19,12 +21,45 @@ from repro.core.flow import cached_table
 from repro.core.functions import get as get_function
 
 from .jax_table import JaxTable, from_spec, make_table_fn
-from .table_pack import TablePack, build_pack, make_pack_fn
+from .table_pack import (QuantTablePack, TablePack, build_pack,
+                         build_quant_pack, make_pack_fn, make_quant_pack_fn)
 
-Mode = str  # "exact" | "table_ref" | "table_pallas" | "table_pack" | "table_pack_ref"
+Mode = str  # "exact" | "table_ref" | "table_pallas" | "table_pack" |
+#             "table_pack_ref" | "quant_pack" | "quant_pack_ref"
 
-TABLE_MODES = ("table_ref", "table_pallas", "table_pack", "table_pack_ref")
+TABLE_MODES = ("table_ref", "table_pallas", "table_pack", "table_pack_ref",
+               "quant_pack", "quant_pack_ref")
 PACK_MODES = ("table_pack", "table_pack_ref")
+QUANT_PACK_MODES = ("quant_pack", "quant_pack_ref")
+
+
+def odd_extension(fn):
+    """Extend an odd function's negative-half approximator to all reals.
+
+    The paper tables tanh on its Table-2 interval [-8, 0); gates and softcap
+    need both signs.  For odd f, f(x) = s * f(s*x) with s = -sign(x) reuses
+    the same table with zero extra entries (the BRAM-side trick behind
+    sigmoid_sym).  The mirror factor is a branchless where (not jnp.sign/abs,
+    whose zero tangent at x = 0 would kill the derivative there): s is
+    piecewise constant, so the chain rule yields s * f'(s*x) * s = f'(s*x)
+    everywhere, including the origin.
+    """
+
+    def extended(x):
+        # weak-typed mirror factor: preserves bf16/f32 inputs, accepts scalars
+        s = jnp.where(jnp.asarray(x) >= 0, -1.0, 1.0)
+        return s * fn(s * x)
+
+    return extended
+
+
+# Registry tables spanning only the negative half-domain of an odd function:
+# every table-mode ``unary`` routes them through ``odd_extension`` so gates,
+# softcap, and any other symmetric-domain consumer get correct values for
+# x > 0 (the raw table would saturate to f(0) there).  Sigmoid instead remaps
+# to the registered symmetric variant ``sigmoid_sym`` (see _TABLE_NAME) — the
+# two halves of the ROADMAP's symmetric-domain item.
+_ODD_HALF_DOMAIN = {"tanh"}
 
 # The function set the model zoo routes through the approx backend (post
 # _TABLE_NAME remap).  One pack built over this set serves every architecture:
@@ -37,6 +72,7 @@ DEFAULT_PACK_FUNCTIONS = (
 # One pack per distinct (functions, e_a, algorithm, omega, intervals) — model
 # constructors re-request the same pack for every layer/activation.
 _PACK_CACHE: Dict[tuple, TablePack] = {}
+_QUANT_PACK_CACHE: Dict[tuple, QuantTablePack] = {}
 
 _EXACT: Dict[str, Callable] = {
     "gelu": lambda x: jax.nn.gelu(x, approximate=False),
@@ -85,6 +121,11 @@ class ApproxConfig:
     softmax_table: bool = False
     interval_overrides: Dict[str, Tuple[float, float]] = field(default_factory=dict)
     pack_functions: Tuple[str, ...] = DEFAULT_PACK_FUNCTIONS
+    # quant_pack modes: interpolation gets quant_rho * e_a, code rounding the
+    # rest; pack_dtype picks the stored width ("auto" = per-function cheapest
+    # of int8/int16 from the budget split, or force "int8"/"int16").
+    quant_rho: float = 0.9
+    pack_dtype: str = "auto"
 
     def table_for(self, name: str) -> JaxTable:
         reg_name = _TABLE_NAME.get(name, name)
@@ -106,6 +147,20 @@ class ApproxConfig:
                 intervals=dict(overrides))
         return _PACK_CACHE[key]
 
+    def quant_pack(self) -> QuantTablePack:
+        """The shared quantized pack (int8/int16 codes, dequantize-on-read)."""
+        names = tuple(self.pack_functions)
+        overrides = tuple(sorted(
+            (k, v) for k, v in self.interval_overrides.items() if k in names))
+        key = (names, self.e_a, self.algorithm, self.omega, overrides,
+               self.quant_rho, self.pack_dtype)
+        if key not in _QUANT_PACK_CACHE:
+            _QUANT_PACK_CACHE[key] = build_quant_pack(
+                names, self.e_a, rho=self.quant_rho, dtype=self.pack_dtype,
+                algorithm=self.algorithm, omega=self.omega,
+                intervals=dict(overrides))
+        return _QUANT_PACK_CACHE[key]
+
     def unary(self, name: str) -> Callable[[jax.Array], jax.Array]:
         """The activation callable for this config."""
         if self.mode == "exact" or name in _NEVER_TABLED:
@@ -117,26 +172,34 @@ class ApproxConfig:
         if self.exact_grad:
             fn = get_function(reg_name)
             exact_d1 = partial(fn.d1f, xp=jnp)
-        if self.mode in PACK_MODES:
-            pack = self.pack()
+        if self.mode in PACK_MODES + QUANT_PACK_MODES:
+            quant = self.mode in QUANT_PACK_MODES
+            pack = self.quant_pack() if quant else self.pack()
             if reg_name not in pack.names:
                 raise KeyError(
                     f"{reg_name!r} is not in pack_functions={pack.names}; add it "
                     f"to ApproxConfig.pack_functions to serve it from the pack")
-            return make_pack_fn(
+            make = make_quant_pack_fn if quant else make_pack_fn
+            f = make(
                 pack,
                 reg_name,
-                use_pallas=(self.mode == "table_pack"),
+                use_pallas=(self.mode in ("table_pack", "quant_pack")),
                 exact_d1=exact_d1,
                 extrapolate=(name in _EXTRAPOLATE),
             )
-        jt = self.table_for(name)
-        return make_table_fn(
-            jt,
-            use_pallas=(self.mode == "table_pallas"),
-            exact_d1=exact_d1,
-            extrapolate=(name in _EXTRAPOLATE),
-        )
+        else:
+            jt = self.table_for(name)
+            f = make_table_fn(
+                jt,
+                use_pallas=(self.mode == "table_pallas"),
+                exact_d1=exact_d1,
+                extrapolate=(name in _EXTRAPOLATE),
+            )
+        if reg_name in _ODD_HALF_DOMAIN:
+            # the registry table spans [-lo, 0): mirror it so gates/softcap get
+            # the full symmetric domain (tanh(x) = -tanh(-|x|) * sign(x))
+            f = odd_extension(f)
+        return f
 
     def softmax(self, x: jax.Array, axis: int = -1, where=None) -> jax.Array:
         """Numerically-shifted softmax; exponent optionally via the exp_neg table."""

@@ -28,7 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flow import cached_table
-from repro.core.packing import PackLayout, pack_layout
+from repro.core.packing import (PackLayout, QuantPackLayout, pack_layout,
+                                quant_pack_layout)
+from repro.core.quantize import plan_quant_member
 from repro.core.table import TableSpec
 
 from .jax_table import select_interval
@@ -153,6 +155,229 @@ def eval_pack_slope(pack: TablePack, fn, x: jax.Array, *,
         inside = (xf >= pack.boundaries[fid, 0]) & (xf < pack.boundaries[fid, n])
         slope = slope * inside.astype(jnp.float32)
     return slope.astype(dtype)
+
+
+# --------------------------------------------------------------------------------------
+# QuantPack — the pack with int8/int16 entry codes, dequantized on read.
+# --------------------------------------------------------------------------------------
+
+
+class QuantTablePack(NamedTuple):
+    """Device-ready quantized multi-function pack.
+
+    Entries live as int8/int16 codes in two width-group vectors; the selector
+    metadata plus per-sub-interval dequant params (scale, zero, ramp) are flat
+    RAGGED f32 lanes — member ``fid``'s segment starts at a STATIC offset
+    derived from the static ``n_intervals`` tuple, so no (F, n_max) padding is
+    paid (see :class:`repro.core.packing.QuantPackLayout`).  Dequantize-on-read
+    is one extra FMA per gathered endpoint: ``v = (zero + ramp*i) + scale*q``.
+    """
+
+    names: Tuple[str, ...]  # static: member function names (fn_id order)
+    n_intervals: Tuple[int, ...]  # static: sub-interval count per member
+    entry_bits: Tuple[int, ...]  # static: 8 | 16 → which codes vector
+    rho: Tuple[float, ...]  # static: interpolation share of e_a per member
+    boundaries: jax.Array  # (sum n_f+1,) f32 flat rows
+    inv_delta: jax.Array  # (sum n_f,) f32
+    base: jax.Array  # (sum n_f,) f32 — GLOBAL index into the width-group codes
+    seg_count: jax.Array  # (sum n_f,) f32
+    scale: jax.Array  # (sum n_f,) f32
+    zero: jax.Array  # (sum n_f,) f32
+    ramp: jax.Array  # (sum n_f,) f32
+    codes8: jax.Array  # (max(M8,1),) int8
+    codes16: jax.Array  # (max(M16,1),) int16
+
+    @property
+    def n_functions(self) -> int:
+        return len(self.names)
+
+    @property
+    def footprint(self) -> int:
+        """Stored entries — excludes the 1-entry dummy of an unused width group,
+        so it agrees with :class:`QuantPackLayout`'s accounting."""
+        m8 = self.codes8.shape[0] if 8 in self.entry_bits else 0
+        m16 = self.codes16.shape[0] if 16 in self.entry_bits else 0
+        return int(m8 + m16)
+
+    @property
+    def footprint_bytes(self) -> int:
+        m8 = self.codes8.shape[0] if 8 in self.entry_bits else 0
+        m16 = self.codes16.shape[0] if 16 in self.entry_bits else 0
+        return int(m8 + 2 * m16)
+
+    def fn_id(self, name: str) -> int:
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise KeyError(f"function {name!r} not in pack {self.names}") from None
+
+    def bounds_offset(self, fid: int) -> int:
+        return sum(n + 1 for n in self.n_intervals[:fid])
+
+    def lane_offset(self, fid: int) -> int:
+        return sum(self.n_intervals[:fid])
+
+    def codes_for(self, fid: int) -> jax.Array:
+        return self.codes8 if self.entry_bits[fid] == 8 else self.codes16
+
+
+def from_quant_layout(layout: QuantPackLayout) -> QuantTablePack:
+    if max(len(layout.codes8), len(layout.codes16)) >= (1 << 24):
+        raise ValueError("pack footprint exceeds f32 exact-integer range")
+
+    def codes_arr(codes: np.ndarray, dtype) -> jax.Array:
+        if len(codes) == 0:  # keep a 1-entry dummy so the operand stays valid
+            return jnp.zeros((1,), dtype=dtype)
+        return jnp.asarray(codes, dtype=dtype)
+
+    f32 = lambda a: jnp.asarray(np.asarray(a, dtype=np.float64),
+                                dtype=jnp.float32)
+    return QuantTablePack(
+        names=layout.names,
+        n_intervals=layout.n_intervals,
+        entry_bits=layout.entry_bits,
+        rho=tuple(m.rho for m in layout.members),
+        boundaries=f32(layout.boundaries),
+        inv_delta=f32(layout.inv_delta),
+        base=f32(layout.base),
+        seg_count=f32(layout.seg_count),
+        scale=f32(layout.scale),
+        zero=f32(layout.zero),
+        ramp=f32(layout.ramp),
+        codes8=codes_arr(layout.codes8, jnp.int8),
+        codes16=codes_arr(layout.codes16, jnp.int16),
+    )
+
+
+def build_quant_pack(
+    names: Sequence[str],
+    e_a: float,
+    *,
+    rho: float = 0.9,
+    dtype: str = "auto",
+    algorithm: str = "hierarchical",
+    omega: float = 0.3,
+    intervals: Optional[dict] = None,
+) -> QuantTablePack:
+    """Error-budgeted quantized pack: interpolation gets ``rho * e_a``, code
+    rounding the rest; int8 vs int16 is chosen per member (``dtype='auto'``)."""
+    intervals = intervals or {}
+    members = []
+    for name in names:
+        lo, hi = intervals.get(name, (None, None))
+        members.append(plan_quant_member(
+            name, e_a, lo, hi, algorithm=algorithm, omega=omega,
+            rho=rho, dtype=dtype))
+    return from_quant_layout(quant_pack_layout(members))
+
+
+def _quant_select(pack: QuantTablePack, fid: int, xf: jax.Array):
+    """Selector + seven gathers against member ``fid``'s ragged lane segment."""
+    bo, lo = pack.bounds_offset(fid), pack.lane_offset(fid)
+    n = pack.n_intervals[fid]
+    brow = pack.boundaries[bo : bo + n + 1]
+    j = select_interval(brow, n, xf)
+    p = jnp.take(brow, j, axis=0)
+    invd = jnp.take(pack.inv_delta[lo : lo + n], j, axis=0)
+    base = jnp.take(pack.base[lo : lo + n], j, axis=0)
+    segs = jnp.take(pack.seg_count[lo : lo + n], j, axis=0)
+    scale = jnp.take(pack.scale[lo : lo + n], j, axis=0)
+    zero = jnp.take(pack.zero[lo : lo + n], j, axis=0)
+    ramp = jnp.take(pack.ramp[lo : lo + n], j, axis=0)
+    return p, invd, base, segs, scale, zero, ramp
+
+
+def eval_quant_pack_ref(pack: QuantTablePack, fn, x: jax.Array, *,
+                        extrapolate: bool = False) -> jax.Array:
+    """Pure-jnp dequantize-on-read oracle — bit-identical to the Pallas kernel."""
+    fid = _resolve(pack, fn)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    p, invd, base, segs, scale, zero, ramp = _quant_select(pack, fid, xf)
+    u = (xf - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    codes = pack.codes_for(fid)
+    c0 = jnp.take(codes, a, axis=0).astype(jnp.float32)
+    c1 = jnp.take(codes, a + 1, axis=0).astype(jnp.float32)
+    r = zero + ramp * i  # the chord ramp at entry i
+    y0 = r + scale * c0
+    y1 = (r + ramp) + scale * c1
+    t = u - i
+    if not extrapolate:
+        t = jnp.clip(t, 0.0, 1.0)
+    return (y0 + t * (y1 - y0)).astype(dtype)
+
+
+def eval_quant_pack_slope(pack: QuantTablePack, fn, x: jax.Array, *,
+                          extrapolate: bool = False) -> jax.Array:
+    """d/dx of the quantized surrogate: (ramp + scale * (c1 - c0)) / delta."""
+    fid = _resolve(pack, fn)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    p, invd, base, segs, scale, zero, ramp = _quant_select(pack, fid, xf)
+    i = jnp.clip(jnp.floor((xf - p) * invd), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    codes = pack.codes_for(fid)
+    c0 = jnp.take(codes, a, axis=0).astype(jnp.float32)
+    c1 = jnp.take(codes, a + 1, axis=0).astype(jnp.float32)
+    slope = (ramp + scale * (c1 - c0)) * invd
+    if not extrapolate:
+        bo = pack.bounds_offset(fid)
+        n = pack.n_intervals[fid]
+        inside = ((xf >= pack.boundaries[bo]) &
+                  (xf < pack.boundaries[bo + n]))
+        slope = slope * inside.astype(jnp.float32)
+    return slope.astype(dtype)
+
+
+def make_quant_pack_fn(
+    pack: QuantTablePack,
+    name: str,
+    *,
+    use_pallas: bool = True,
+    exact_d1=None,
+    extrapolate: bool = False,
+):
+    """Differentiable unary ``f(x)`` served from the quantized pack.
+
+    Mirrors :func:`make_pack_fn`: quantized-table-slope tangent by default,
+    ``exact_d1`` for the analytic derivative, ``use_pallas=True`` for the
+    fused dequantize-on-read kernel (value + slope in one selector pass on the
+    training path).
+    """
+    fid = pack.fn_id(name)
+    if use_pallas:
+        from repro.kernels.table_pack_lookup import (
+            quant_pack_grad_pallas, quant_pack_lookup_pallas)
+
+        fwd_impl = lambda v: quant_pack_lookup_pallas(
+            pack, fid, v, extrapolate=extrapolate)
+        fused_grad = lambda v: quant_pack_grad_pallas(
+            pack, fid, v, extrapolate=extrapolate)
+    else:
+        fwd_impl = lambda v: eval_quant_pack_ref(pack, fid, v,
+                                                 extrapolate=extrapolate)
+        fused_grad = None
+
+    @jax.custom_jvp
+    def f(x):
+        return fwd_impl(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        if exact_d1 is not None:
+            y = fwd_impl(x)
+            slope = exact_d1(x)
+        elif fused_grad is not None:
+            y, slope = fused_grad(x)
+        else:
+            y = fwd_impl(x)
+            slope = eval_quant_pack_slope(pack, fid, x, extrapolate=extrapolate)
+        return y, slope * dx
+
+    return f
 
 
 def make_pack_fn(

@@ -15,8 +15,17 @@ from .splitting import (
 from .table import TableSpec, build_table
 from .flow import FlowReport, cached_table, run_flow
 from .bram import bram_count, bram_count_packed, vmem_cost, vmem_cost_pack
-from .packing import PackLayout, pack_layout
-from .quantize import FixedPointFormat, PAPER_FORMATS
+from .packing import PackLayout, QuantPackLayout, pack_layout, quant_pack_layout
+from .quantize import (
+    FixedPointFormat,
+    PAPER_FORMATS,
+    QUANT_INT_BITS,
+    QuantMember,
+    chord_residual_ranges,
+    plan_quant_member,
+    quantize_spec,
+    refine_for_quantization,
+)
 from .stats import TTestResult, outperforms, t_cdf, ttest2
 
 __all__ = [
@@ -26,6 +35,9 @@ __all__ = [
     "FunctionSpec",
     "PackLayout",
     "PAPER_FORMATS",
+    "QUANT_INT_BITS",
+    "QuantMember",
+    "QuantPackLayout",
     "SecondDerivMax",
     "SplitResult",
     "TTestResult",
@@ -35,6 +47,7 @@ __all__ = [
     "bram_count_packed",
     "build_table",
     "cached_table",
+    "chord_residual_ranges",
     "delta_for",
     "footprint",
     "function_names",
@@ -42,6 +55,10 @@ __all__ = [
     "hierarchical_split",
     "outperforms",
     "pack_layout",
+    "plan_quant_member",
+    "quant_pack_layout",
+    "quantize_spec",
+    "refine_for_quantization",
     "reference_spacing",
     "run_flow",
     "sequential_split",

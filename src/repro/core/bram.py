@@ -83,24 +83,45 @@ def vmem_cost(
 def vmem_cost_pack(
     footprints,
     n_intervals,
-    dtype_bytes: int = 4,
+    dtype_bytes=4,
     budget_bytes: int = VMEM_BYTES_V5E,
+    *,
+    meta_lanes: int = 4,
+    ragged_meta: bool = False,
 ) -> VmemCost:
     """VMEM residency of a multi-function TablePack inside the fused kernel.
 
-    The pack concatenates every function's values into one vector and keeps the
-    selector metadata as padded (F, n_max) planes — boundaries (F, n_max+1),
-    inv_delta / base / seg_count (F, n_max each) — so the metadata cost is set by
-    the WIDEST member (n_max), not the sum of per-function pinnings.  One pack
+    The pack concatenates every function's values into one vector; one pack
     replaces F separate (table + metadata) residencies and F kernel dispatches.
+
+    ``dtype_bytes`` is the entry width — a scalar, or one width per member
+    function for mixed-precision packs (QuantPack stores int8 and int16 codes
+    side by side; metadata stays f32 regardless).  ``meta_lanes`` counts the
+    per-sub-interval f32 metadata lanes: 4 for the f32 pack (boundaries,
+    inv_delta, base, seg_count), 7 for QuantPack (+ scale, zero, ramp).
+
+    ``ragged_meta=False`` models :class:`PackLayout`'s padded (F, n_max)
+    planes — the metadata cost is set by the WIDEST member, not the sum of
+    per-function pinnings.  ``ragged_meta=True`` models QuantPack's flat
+    concatenated lanes: ``sum_f (meta_lanes * n_f + 1)`` f32 entries, no
+    padding waste (static fn_id offsets make raggedness free in the kernel).
     """
     footprints = list(footprints)
     n_list = list(n_intervals)
     if len(footprints) != len(n_list) or not footprints:
         raise ValueError("need one footprint and n_intervals per packed function")
-    n_max = max(n_list)
-    table = sum(footprints) * dtype_bytes
-    meta = len(footprints) * (4 * n_max + 1) * 4  # metadata pinned f32
+    if isinstance(dtype_bytes, int):
+        dtype_list = [dtype_bytes] * len(footprints)
+    else:
+        dtype_list = list(dtype_bytes)
+        if len(dtype_list) != len(footprints):
+            raise ValueError("need one dtype_bytes per packed function")
+    table = sum(m * db for m, db in zip(footprints, dtype_list))
+    if ragged_meta:
+        meta = sum((meta_lanes * n + 1) * 4 for n in n_list)
+    else:
+        n_max = max(n_list)
+        meta = len(footprints) * (meta_lanes * n_max + 1) * 4  # pinned f32
     pad = VMEM_SUBLANE_BYTES
     padded = math.ceil((table + meta) / pad) * pad
     return VmemCost(table, meta, padded, budget_bytes)

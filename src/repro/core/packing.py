@@ -41,6 +41,7 @@ import numpy as np
 
 from . import bram
 from .functions import FunctionSpec, get as get_function
+from .quantize import QuantMember
 from .table import TableSpec, build_table
 
 BRAM_WIDTHS = (1, 2, 4, 9, 18, 36)  # physical BRAM18 entry widths
@@ -152,6 +153,140 @@ def pack_layout(specs: Sequence[TableSpec]) -> PackLayout:
         seg_count=seg_count,
         value_offset=value_offset,
         values=np.concatenate([s.values for s in specs]),
+    )
+
+
+# --------------------------------------------------------------------------------------
+# QuantPack layout — the pack with int8/int16 entry codes + dequant metadata.
+# --------------------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class QuantPackLayout:
+    """F quantized tables packed into per-width code vectors + flat metadata lanes.
+
+    Unlike :class:`PackLayout`'s (F, n_max)-padded planes, the metadata here is
+    RAGGED — flat lanes concatenated per function — because quantization
+    refinement (``core.quantize.refine_for_quantization``) gives members very
+    different sub-interval counts and padding every plane to the widest member
+    would cost more than the quantization saves.  The kernel indexes a member's
+    lane segment with STATIC offsets (``fn_id`` is static), so raggedness is
+    free at runtime.
+
+      * ``boundaries``  (sum_f n_f+1,)  per-function rows back to back;
+      * ``inv_delta`` / ``base`` / ``seg_count`` / ``scale`` / ``zero`` /
+        ``ramp``        (sum_f n_f,)    the selector + dequant lanes;
+      * ``codes8``      (M8,) int8-coded entries of every int8 member;
+      * ``codes16``     (M16,) likewise for int16 members.
+
+    ``base`` holds GLOBAL indices into the member's own width-group vector.
+    Dequantize-on-read: ``v = zero_j + ramp_j * i + scale_j * q``.
+    """
+
+    names: Tuple[str, ...]
+    members: Tuple[QuantMember, ...]
+    n_intervals: Tuple[int, ...]
+    entry_bits: Tuple[int, ...]  # 8 or 16 per member (which codes vector)
+    boundaries: np.ndarray  # (sum n_f+1,) f64
+    inv_delta: np.ndarray  # (sum n_f,) f64
+    delta: np.ndarray  # (sum n_f,) f64
+    base: np.ndarray  # (sum n_f,) i64 — global into the width-group codes
+    seg_count: np.ndarray  # (sum n_f,) i64
+    scale: np.ndarray  # (sum n_f,) f64
+    zero: np.ndarray  # (sum n_f,) f64
+    ramp: np.ndarray  # (sum n_f,) f64
+    value_offset: np.ndarray  # (F,) i64 — first codes index within the group
+    codes8: np.ndarray  # (M8,) i64 codes of the int8 members, concatenated
+    codes16: np.ndarray  # (M16,) i64 codes of the int16 members, concatenated
+
+    @property
+    def n_functions(self) -> int:
+        return len(self.names)
+
+    @property
+    def footprint(self) -> int:
+        """Total stored entries (Eq. 13 accounting, width-agnostic)."""
+        return int(len(self.codes8) + len(self.codes16))
+
+    @property
+    def footprint_bytes(self) -> int:
+        """Entry storage bytes — the quantization win vs ``footprint * 4``."""
+        return int(len(self.codes8) + 2 * len(self.codes16))
+
+    @property
+    def meta_bytes(self) -> int:
+        return sum(m.meta_bytes for m in self.members)
+
+    def fn_id(self, name: str) -> int:
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise KeyError(
+                f"function {name!r} not in pack {self.names}") from None
+
+    def bounds_offset(self, fid: int) -> int:
+        return sum(n + 1 for n in self.n_intervals[:fid])
+
+    def lane_offset(self, fid: int) -> int:
+        return sum(self.n_intervals[:fid])
+
+    def eval(self, fn, x: np.ndarray) -> np.ndarray:
+        """f64 dequantize-on-read oracle for member ``fn`` (name or fn_id)."""
+        fid = self.fn_id(fn) if isinstance(fn, str) else int(fn)
+        return self.members[fid].eval(x)
+
+    def vmem(self, budget_bytes: int = bram.VMEM_BYTES_V5E) -> bram.VmemCost:
+        """Pack-level VMEM cost with per-member entry widths and ragged metadata."""
+        return bram.vmem_cost_pack(
+            [m.footprint for m in self.members], self.n_intervals,
+            dtype_bytes=[b // 8 for b in self.entry_bits],
+            budget_bytes=budget_bytes, meta_lanes=7, ragged_meta=True)
+
+
+def quant_pack_layout(members: Sequence[QuantMember]) -> QuantPackLayout:
+    """Concatenate per-function :class:`QuantMember` artifacts into one layout."""
+    if not members:
+        raise ValueError("cannot pack zero tables")
+    names = tuple(m.name for m in members)
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate function names in pack: {names}")
+    boundaries, inv_delta, delta, base, seg_count = [], [], [], [], []
+    scale, zero, ramp = [], [], []
+    value_offset = np.zeros((len(members),), dtype=np.int64)
+    group_acc = {8: 0, 16: 0}
+    codes = {8: [], 16: []}
+    for f, m in enumerate(members):
+        s = m.spec
+        boundaries.append(s.boundaries)
+        inv_delta.append(s.inv_delta)
+        delta.append(s.delta)
+        seg_count.append(s.seg_count)
+        scale.append(m.scale)
+        zero.append(m.zero)
+        ramp.append(m.ramp)
+        acc = group_acc[m.bits]
+        base.append(s.base + acc)
+        value_offset[f] = acc
+        codes[m.bits].append(m.codes)
+        group_acc[m.bits] = acc + m.footprint
+    cat = lambda parts: (np.concatenate(parts) if parts
+                         else np.zeros((0,), dtype=np.int64))
+    return QuantPackLayout(
+        names=names,
+        members=tuple(members),
+        n_intervals=tuple(m.spec.n_intervals for m in members),
+        entry_bits=tuple(m.bits for m in members),
+        boundaries=np.concatenate(boundaries),
+        inv_delta=np.concatenate(inv_delta),
+        delta=np.concatenate(delta),
+        base=np.concatenate(base),
+        seg_count=np.concatenate(seg_count),
+        scale=np.concatenate(scale),
+        zero=np.concatenate(zero),
+        ramp=np.concatenate(ramp),
+        value_offset=value_offset,
+        codes8=cat(codes[8]),
+        codes16=cat(codes[16]),
     )
 
 

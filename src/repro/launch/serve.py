@@ -27,10 +27,12 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--approx-mode",
                     choices=["exact", "table_ref", "table_pallas", "table_pack",
-                             "table_pack_ref"],
+                             "table_pack_ref", "quant_pack", "quant_pack_ref"],
                     default=None,
                     help="nonlinearity backend; table_pack = one fused "
-                         "multi-function pack + kernel for the whole network")
+                         "multi-function pack + kernel for the whole network, "
+                         "quant_pack = the same pack with int8/int16 entries "
+                         "dequantized on read")
     ap.add_argument("--approx-ea", type=float, default=None,
                     help="override the config's error budget E_a")
     args = ap.parse_args()

@@ -96,22 +96,18 @@ def sinusoidal_positions(n: int, d: int) -> jax.Array:
     return jnp.asarray(emb, dtype=jnp.float32)
 
 
-def odd_extension(fn):
-    """Extend an odd function's negative-half approximator to all reals.
-
-    The paper tables tanh on its Table-2 interval [-8, 0); gates and softcap
-    need both signs.  For odd f, f(x) = -f(-|x|) * sign(x) reuses the same
-    table with zero extra entries (the BRAM-side trick behind sigmoid_sym).
-    """
-    return lambda x: -fn(-jnp.abs(x)) * jnp.sign(x)
+# Canonical home is the approx backend, which applies it to every table-mode
+# tanh automatically; re-exported here for the model-side callers.
+from repro.approx.activations import odd_extension  # noqa: E402
 
 
 def softcap(x: jax.Array, cap: float, tanh_fn=None) -> jax.Array:
     """Soft logit cap ``cap * tanh(x / cap)``.
 
-    ``tanh_fn`` lets the caller route the tanh through the approx backend (the
-    table / TablePack runtimes) instead of the exact transcendental — models
-    pass ``cfg.approx.unary("tanh")`` when a table mode is active.
+    ``tanh_fn`` lets the caller route the tanh through the approx backend
+    instead of the exact transcendental — models pass
+    ``cfg.approx.unary("tanh")``, which is already odd-extended to the full
+    symmetric domain in table modes.
     """
     if cap <= 0:
         return x

@@ -43,7 +43,6 @@ from .common import (
     init_linear,
     init_rmsnorm,
     linear,
-    odd_extension,
     rmsnorm,
     sinusoidal_positions,
     softcap,
@@ -97,12 +96,13 @@ class BaseLM:
         self.cfg = cfg
         self.dtype = jnp.dtype(cfg.compute_dtype)
         self.act = cfg.approx.unary(cfg.act)
-        # Route the final-logit softcap tanh through the approx backend too (in
-        # table/pack modes the tanh table only spans the paper's [-8, 0), so
-        # extend it oddly); exact mode keeps jnp.tanh via softcap's default.
+        # Route the final-logit softcap tanh through the approx backend too.
+        # The backend odd-extends every table-mode tanh to the full symmetric
+        # domain (the table spans the paper's [-8, 0) only), and returns
+        # jnp.tanh in exact mode — one uniform path for gates and softcap.
         self._cap_tanh = None
-        if cfg.approx.mode != "exact" and cfg.attn.logit_softcap > 0:
-            self._cap_tanh = odd_extension(cfg.approx.unary("tanh"))
+        if cfg.attn.logit_softcap > 0:
+            self._cap_tanh = cfg.approx.unary("tanh")
 
     def loss(self, params, batch):
         logits, aux = self.train_logits(params, batch)

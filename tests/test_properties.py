@@ -8,6 +8,10 @@ Invariants from the paper:
   3. Partition validity: sorted, spans exactly [lo, hi), no empty sub-intervals.
   4. Monotone Ea: halving Ea never shrinks the Reference footprint.
   5. Fixed-point quantization is idempotent and bounded by half-ULP in range.
+  6. QuantPack entry codes: chord-residual affine quantization round-trips
+     within the rounding share of the budget, refinement never breaks the
+     partition or the stored piecewise-linear function, and the end-to-end
+     |f - dequantized table| stays <= Ea for any (function, Ea, rho, width).
 """
 
 import math
@@ -21,12 +25,16 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (
     FixedPointFormat,
     build_table,
+    chord_residual_ranges,
     delta_for,
     footprint,
     get_function,
+    quantize_spec,
+    refine_for_quantization,
     reference_spacing,
     split,
 )
+from repro.core.quantize import quant_rounding_limit
 
 FUNCS = ["log", "exp", "tanh", "sigmoid", "gauss", "gelu", "silu", "softplus"]
 ALGS = ["reference", "binary", "hierarchical", "sequential"]
@@ -118,6 +126,53 @@ def test_fixed_point_idempotent_and_bounded(signed, width, frac, data):
     if in_range.any():
         err = np.abs(q[in_range] - x[in_range])
         assert np.max(err) <= fmt.quantization_error_bound() * (1 + 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    name=st.sampled_from(["tanh", "gelu", "log", "sigmoid"]),
+    ea_exp=st.floats(-5.0, -2.5),
+    rho=st.floats(0.5, 0.95),
+    bits=st.sampled_from([8, 16]),
+)
+def test_quant_round_trip_within_rounding_budget(name, ea_exp, rho, bits):
+    """Affine chord-residual codes reconstruct every stored entry within the
+    rounding share (1 - rho) * Ea of the budget, at either storage width."""
+    ea = 10.0 ** ea_exp
+    tol = (1.0 - rho) * ea
+    ts = build_table(name, rho * ea)
+    refined = refine_for_quantization(ts, quant_rounding_limit(tol, bits))
+    assert chord_residual_ranges(refined).max(initial=0.0) <= \
+        quant_rounding_limit(tol, bits) * (1 + 1e-12)
+    m = quantize_spec(refined, tol, bits, rho=rho, e_a=ea)
+    # round trip: dequantized entries vs the f64 table values
+    err = np.max(np.abs(m.dequantize() - refined.values))
+    assert err <= tol * (1 + 1e-9), (name, ea, rho, bits, err)
+    # codes fit the signed storage width
+    assert m.codes.min() >= -(2 ** (bits - 1))
+    assert m.codes.max() <= 2 ** (bits - 1) - 1
+    # refinement kept a valid partition over the same interval
+    p = m.spec.boundaries
+    assert p[0] == ts.boundaries[0] and p[-1] == ts.boundaries[-1]
+    assert np.all(np.diff(p) > 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    name=st.sampled_from(["tanh", "gelu", "log", "sigmoid"]),
+    ea_exp=st.floats(-5.0, -2.5),
+    rho=st.floats(0.5, 0.95),
+    bits=st.sampled_from([8, 16]),
+)
+def test_quant_end_to_end_error_bound(name, ea_exp, rho, bits):
+    """Eq. 10 (at rho*Ea) + rounding <= (1-rho)*Ea compose: the dequantized
+    table never exceeds the full budget Ea anywhere in the interval."""
+    ea = 10.0 ** ea_exp
+    tol = (1.0 - rho) * ea
+    ts = build_table(name, rho * ea)
+    refined = refine_for_quantization(ts, quant_rounding_limit(tol, bits))
+    m = quantize_spec(refined, tol, bits, rho=rho, e_a=ea)
+    assert m.max_error_on_grid(n=20_001) <= ea * (1 + 1e-6)
 
 
 @settings(max_examples=30, deadline=None)

@@ -1,0 +1,351 @@
+"""QuantPack validation: the error-budget split must keep |f - table| <= Ea end
+to end for EVERY registered function, the dequantize-on-read Pallas kernels
+must reproduce the quantized jnp oracle bit for bit, int8/int16 selection must
+come out of the budget split automatically, and the byte accounting must be
+entry-dtype-aware (regression for the hard-coded-f32 assumption)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx import (
+    ApproxConfig,
+    eval_quant_pack_ref,
+    eval_quant_pack_slope,
+    from_quant_layout,
+)
+from repro.core import (
+    build_table,
+    chord_residual_ranges,
+    function_names,
+    get_function,
+    plan_quant_member,
+    quant_pack_layout,
+    refine_for_quantization,
+    vmem_cost_pack,
+)
+from repro.core.quantize import quant_rounding_limit
+from repro.kernels.ops import quant_pack_lookup
+from repro.kernels.table_pack_lookup import quant_pack_grad_pallas, quant_pack_lookup_pallas
+
+RNG = np.random.default_rng(11)
+
+EA = 1e-4
+RHO = 0.9
+
+# Planning runs the design flow + refinement twice (int8/int16 candidates) per
+# function; share the members across the whole module.
+_MEMBERS = {}
+
+
+def member(name, **kw):
+    key = (name, tuple(sorted(kw.items())))
+    if key not in _MEMBERS:
+        _MEMBERS[key] = plan_quant_member(name, EA, rho=RHO, **kw)
+    return _MEMBERS[key]
+
+
+def _probe(spec, n=2048):
+    lo, hi, span = spec.lo, spec.hi, spec.hi - spec.lo
+    return jnp.asarray(
+        RNG.uniform(lo - 0.5 * span, hi + 0.5 * span, size=n).astype(np.float32))
+
+
+class TestBudgetSplit:
+    """The error-budget splitter: rho*Ea interpolation + (1-rho)*Ea rounding."""
+
+    def test_width_selected_automatically(self):
+        for name in ("gelu", "tanh", "exp_neg"):
+            m = member(name)
+            assert m.bits in (8, 16)
+            assert m.rho == RHO and m.e_a == EA
+
+    def test_interpolation_table_built_at_rho_ea(self):
+        m = member("tanh")
+        assert m.spec.e_a == pytest.approx(RHO * EA)
+
+    def test_forced_widths(self):
+        for bits in (8, 16):
+            m = member("gelu", dtype=f"int{bits}")
+            assert m.bits == bits
+            lim = quant_rounding_limit((1 - RHO) * EA, bits)
+            assert chord_residual_ranges(m.spec).max(initial=0.0) <= lim
+
+    def test_codes_fit_signed_storage(self):
+        for name in ("gelu", "sigmoid_sym"):
+            m = member(name)
+            lo, hi = -(2 ** (m.bits - 1)), 2 ** (m.bits - 1) - 1
+            assert m.codes.min() >= lo and m.codes.max() <= hi
+
+    def test_bad_rho_rejected(self):
+        with pytest.raises(ValueError):
+            plan_quant_member("gelu", EA, rho=1.5)
+
+    def test_bad_dtype_rejected(self):
+        with pytest.raises(ValueError):
+            plan_quant_member("gelu", EA, dtype="int4")
+
+    def test_infeasible_within_cap_raises(self):
+        # gelu's chord residuals cannot reach the int8 budget with <= 2
+        # sub-intervals; the splitter must say so instead of shipping a pack
+        # that silently violates Ea.
+        with pytest.raises(ValueError):
+            plan_quant_member("gelu", EA, dtype="int8", cap=2)
+
+
+class TestRefinement:
+    """Quantization refinement: same piecewise-linear function, smaller residuals."""
+
+    def test_partition_valid_and_residuals_bounded(self):
+        ts = build_table("gelu", RHO * EA, algorithm="hierarchical", omega=0.3)
+        limit = quant_rounding_limit((1 - RHO) * EA, 8)
+        ref = refine_for_quantization(ts, limit)
+        p = ref.boundaries
+        assert p[0] == ts.boundaries[0] and p[-1] == ts.boundaries[-1]
+        assert np.all(np.diff(p) > 0)
+        assert chord_residual_ranges(ref).max(initial=0.0) <= limit
+
+    def test_each_cut_duplicates_one_entry(self):
+        ts = build_table("silu", RHO * EA, algorithm="hierarchical", omega=0.3)
+        limit = quant_rounding_limit((1 - RHO) * EA, 8)
+        ref = refine_for_quantization(ts, limit)
+        assert ref.footprint == ts.footprint + (ref.n_intervals - ts.n_intervals)
+
+    def test_evaluation_preserved(self):
+        ts = build_table("tanh", RHO * EA, algorithm="hierarchical", omega=0.3)
+        limit = quant_rounding_limit((1 - RHO) * EA, 8)
+        ref = refine_for_quantization(ts, limit)
+        assert ref.n_intervals > ts.n_intervals  # the cut actually happened
+        xs = np.linspace(ts.lo, ts.hi - 1e-9, 20_001)
+        np.testing.assert_allclose(ref.eval(xs), ts.eval(xs), atol=1e-12)
+
+    def test_noop_when_budget_is_loose(self):
+        ts = build_table("tanh", RHO * EA, algorithm="hierarchical", omega=0.3)
+        assert refine_for_quantization(ts, limit=1e9) is ts
+
+    def test_round_trip_within_rounding_budget(self):
+        tol = (1 - RHO) * EA
+        for name in ("gelu", "log"):
+            m = member(name)
+            err = np.max(np.abs(m.dequantize() - m.spec.values))
+            assert err <= tol * (1 + 1e-9), (name, err)
+
+
+class TestErrorBoundEndToEnd:
+    """Acceptance: interpolation + quantization error <= Ea for every
+    registered function, in f64 (oracle) and f32 (runtime)."""
+
+    def test_every_registered_function_meets_ea_f64(self):
+        for name in function_names():
+            m = member(name)
+            err = m.max_error_on_grid(n=20_001)
+            assert err <= EA * (1 + 1e-6), (name, m.bits, err)
+
+    def test_every_registered_function_meets_ea_f32_runtime(self):
+        names = function_names()
+        pack = from_quant_layout(quant_pack_layout([member(n) for n in names]))
+        for name in names:
+            fn = get_function(name)
+            lo, hi = fn.interval
+            xs = np.linspace(lo, hi, 4001)[:-1]
+            got = np.asarray(
+                eval_quant_pack_ref(pack, name, jnp.asarray(xs, jnp.float32)),
+                dtype=np.float64)
+            err = np.max(np.abs(got - np.asarray(fn.f(xs))))
+            # f32 gathers/FMAs add rounding noise on top of the f64 bound,
+            # relative to the function's magnitude (tan reaches ~14)
+            scale = max(1.0, float(np.max(np.abs(fn.f(xs)))))
+            assert err <= EA * 1.02 + 1e-5 * scale, (name, err)
+
+
+class TestQuantKernel:
+    """Pallas dequantize-on-read == the quantized jnp oracle, bitwise."""
+
+    def test_kernel_bit_identical_to_oracle(self):
+        names = ["gelu", "tanh", "sigmoid_sym", "exp_neg"]
+        pack = from_quant_layout(quant_pack_layout([member(n) for n in names]))
+        for name in names:
+            x = _probe(member(name).spec)
+            for ex in (False, True):
+                want = jax.jit(
+                    lambda v, n=name, e=ex: eval_quant_pack_ref(
+                        pack, n, v, extrapolate=e))(x)
+                got = quant_pack_lookup(pack, name, x, extrapolate=ex)
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(want), err_msg=f"{name} ex={ex}")
+
+    def test_mixed_width_pack_serves_both_vectors(self):
+        members = [member("tanh", dtype="int8"), member("gelu", dtype="int16")]
+        pack = from_quant_layout(quant_pack_layout(members))
+        assert pack.entry_bits == (8, 16)
+        for m in members:
+            x = _probe(m.spec, n=512)
+            got = np.asarray(quant_pack_lookup(pack, m.name, x))
+            want = np.asarray(jax.jit(
+                lambda v, n=m.name: eval_quant_pack_ref(pack, n, v))(x))
+            np.testing.assert_array_equal(got, want, err_msg=m.name)
+
+    def test_fused_grad_kernel(self):
+        pack = from_quant_layout(quant_pack_layout(
+            [member("gelu"), member("tanh")]))
+        x = jnp.asarray(RNG.normal(0, 4, size=(7, 193)).astype(np.float32))
+        for name, ex in [("gelu", True), ("tanh", False)]:
+            y, dy = quant_pack_grad_pallas(pack, name, x, extrapolate=ex)
+            np.testing.assert_array_equal(
+                np.asarray(y),
+                np.asarray(jax.jit(lambda v, n=name, e=ex: eval_quant_pack_ref(
+                    pack, n, v, extrapolate=e))(x)))
+            np.testing.assert_array_equal(
+                np.asarray(dy),
+                np.asarray(jax.jit(lambda v, n=name, e=ex: eval_quant_pack_slope(
+                    pack, n, v, extrapolate=e))(x)))
+
+    @pytest.mark.parametrize("shape", [(8,), (513,), (4, 96), (2, 3, 257)])
+    def test_shapes(self, shape):
+        pack = from_quant_layout(quant_pack_layout([member("silu")]))
+        x = jnp.asarray(RNG.normal(0, 5, size=shape).astype(np.float32))
+        got = quant_pack_lookup_pallas(pack, "silu", x)
+        want = jax.jit(lambda v: eval_quant_pack_ref(pack, "silu", v))(x)
+        assert got.shape == x.shape and got.dtype == x.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestApproxConfigQuantMode:
+    def test_unary_and_grad_match_oracle_mode(self):
+        cfg_k = ApproxConfig(mode="quant_pack", e_a=EA)
+        cfg_r = ApproxConfig(mode="quant_pack_ref", e_a=EA)
+        x = jnp.asarray(RNG.normal(0, 4, size=(300,)).astype(np.float32))
+        for name in ("gelu", "silu", "tanh", "sigmoid", "exp"):
+            a = np.asarray(jax.jit(cfg_k.unary(name))(x))
+            b = np.asarray(jax.jit(cfg_r.unary(name))(x))
+            np.testing.assert_array_equal(a, b, err_msg=name)
+            # bit-parity needs jit on BOTH sides: eager jnp rounds the
+            # ramp + scale*(c1-c0) separately while XLA fuses the FMA
+            ga = np.asarray(jax.jit(jax.vmap(jax.grad(cfg_k.unary(name))))(x))
+            gb = np.asarray(jax.jit(jax.vmap(jax.grad(cfg_r.unary(name))))(x))
+            np.testing.assert_array_equal(ga, gb, err_msg=f"{name} grad")
+
+    def test_pack_is_cached(self):
+        cfg = ApproxConfig(mode="quant_pack", e_a=EA)
+        assert cfg.quant_pack() is cfg.quant_pack()
+
+    def test_forced_dtype_flows_through_config(self):
+        cfg = ApproxConfig(mode="quant_pack_ref", e_a=EA, pack_dtype="int16")
+        assert set(cfg.quant_pack().entry_bits) == {16}
+
+    def test_missing_pack_member_raises(self):
+        cfg = ApproxConfig(mode="quant_pack_ref", e_a=EA,
+                           pack_functions=("gelu",))
+        with pytest.raises(KeyError):
+            cfg.unary("tanh")
+
+    def test_quant_softmax(self):
+        cfg = ApproxConfig(mode="quant_pack_ref", e_a=1e-5, softmax_table=True)
+        x = jnp.asarray(RNG.normal(0, 4, size=(8, 128)).astype(np.float32))
+        sm = cfg.softmax(x)
+        np.testing.assert_allclose(np.asarray(sm.sum(-1)), 1.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sm),
+                                   np.asarray(jax.nn.softmax(x)), atol=5e-4)
+
+
+class TestSymmetricTanhRouting:
+    """Satellite: every table-mode tanh is odd-extended by the backend, so the
+    registry's [-8, 0) table serves gates/softcap on the full real line
+    (previously positive inputs saturated to tanh(0) = 0)."""
+
+    @pytest.mark.parametrize("mode", ["table_ref", "table_pack_ref",
+                                      "quant_pack_ref", "table_pack",
+                                      "quant_pack"])
+    def test_tanh_correct_on_symmetric_domain(self, mode):
+        f = ApproxConfig(mode=mode, e_a=EA).unary("tanh")
+        xs = jnp.linspace(-7.5, 7.5, 301)
+        err = np.max(np.abs(np.asarray(f(xs)) - np.tanh(np.asarray(xs))))
+        assert err <= 2 * EA, (mode, err)
+
+    def test_tanh_is_odd(self):
+        f = ApproxConfig(mode="table_ref", e_a=EA).unary("tanh")
+        xs = jnp.linspace(0.1, 7.5, 64)
+        np.testing.assert_array_equal(np.asarray(f(-xs)), -np.asarray(f(xs)))
+
+    def test_exact_mode_untouched(self):
+        f = ApproxConfig(mode="exact").unary("tanh")
+        xs = jnp.linspace(-3, 3, 32)
+        np.testing.assert_array_equal(np.asarray(f(xs)),
+                                      np.asarray(jnp.tanh(xs)))
+
+    def test_gradient_flows_on_both_signs(self):
+        f = ApproxConfig(mode="quant_pack_ref", e_a=EA).unary("tanh")
+        g = jax.vmap(jax.grad(f))(jnp.asarray([-2.0, -0.5, 0.5, 2.0]))
+        assert np.all(np.asarray(g) > 0)  # tanh' > 0 everywhere
+
+    def test_gradient_survives_origin(self):
+        # the sign/abs mirror had zero tangent at exactly 0; the where-based
+        # mirror keeps the chain rule alive there (regression for
+        # test_exact_grad_mode).  exact-grad mode: tanh'(0) = 1 exactly; the
+        # default slope rule still zeroes x = 0 by the half-open-domain
+        # address-clamp convention (boundaries are [-8, 0)), so probe nearby.
+        f = ApproxConfig(mode="table_ref", e_a=EA, exact_grad=True).unary("tanh")
+        g = float(jax.grad(f)(jnp.asarray(0.0)))
+        assert g == pytest.approx(1.0, abs=1e-3)
+        f2 = ApproxConfig(mode="table_ref", e_a=EA).unary("tanh")
+        g2 = jax.vmap(jax.grad(f2))(jnp.asarray([-0.01, 0.01]))
+        np.testing.assert_allclose(np.asarray(g2), 1.0, atol=1e-2)
+
+    def test_odd_extension_accepts_scalars_and_keeps_dtype(self):
+        from repro.approx import odd_extension
+
+        assert float(odd_extension(jnp.tanh)(2.0)) == pytest.approx(
+            np.tanh(2.0))
+        x = jnp.asarray([-1.0, 0.0, 2.0], jnp.bfloat16)
+        assert odd_extension(jnp.tanh)(x).dtype == jnp.bfloat16
+
+
+class TestByteAccounting:
+    """Satellite: entry-dtype-aware accounting (no hard-coded f32)."""
+
+    def test_vmem_cost_pack_per_function_dtypes(self):
+        c = vmem_cost_pack([100, 50], [3, 5], dtype_bytes=[1, 2])
+        assert c.table_bytes == 100 * 1 + 50 * 2
+        # padded planes: metadata set by the widest member
+        assert c.meta_bytes == 2 * (4 * 5 + 1) * 4
+
+    def test_vmem_cost_pack_ragged_meta(self):
+        c = vmem_cost_pack([100, 50], [3, 5], dtype_bytes=[1, 2],
+                           meta_lanes=7, ragged_meta=True)
+        assert c.meta_bytes == (7 * 3 + 1) * 4 + (7 * 5 + 1) * 4
+
+    def test_dtype_list_length_validated(self):
+        with pytest.raises(ValueError):
+            vmem_cost_pack([100, 50], [3, 5], dtype_bytes=[1])
+
+    def test_layout_accounting_matches_cost_model(self):
+        members = [member(n) for n in ("gelu", "tanh", "exp_neg")]
+        layout = quant_pack_layout(members)
+        c = layout.vmem()
+        assert c.table_bytes == layout.footprint_bytes
+        assert c.meta_bytes == layout.meta_bytes
+        assert layout.footprint_bytes == sum(m.codes_bytes for m in members)
+
+    def test_device_pack_accounting_ignores_dummy_width_group(self):
+        # a single-width pack pads the unused group vector to length 1; the
+        # device-side accounting must still agree with the layout's
+        layout = quant_pack_layout([member("tanh", dtype="int8")])
+        pack = from_quant_layout(layout)
+        assert pack.codes16.shape[0] == 1  # the dummy operand exists...
+        assert pack.footprint == layout.footprint  # ...but is not counted
+        assert pack.footprint_bytes == layout.footprint_bytes
+
+    def test_quantized_pack_at_least_2x_smaller_than_f32(self):
+        """Regression pin: the auto-selected quantized pack's entry storage is
+        >= 2x below the f32 pack at equal Ea (the acceptance headline)."""
+        names = ("gelu", "silu", "tanh", "sigmoid_sym", "softplus", "exp_neg")
+        layout = quant_pack_layout([member(n) for n in names])
+        f32_bytes = 4 * sum(
+            build_table(n, EA, algorithm="hierarchical", omega=0.3).footprint
+            for n in names)
+        assert 2 * layout.footprint_bytes <= f32_bytes, (
+            layout.footprint_bytes, f32_bytes)
+        # and int16 (the worst case of the menu) stays strictly below f32
+        l16 = quant_pack_layout([member(n, dtype="int16") for n in names])
+        assert l16.footprint_bytes < f32_bytes
