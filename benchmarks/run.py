@@ -45,6 +45,7 @@ def main() -> None:
     rows += kernel_bench.interval_count_flatness()
     rows += kernel_bench.pack_dispatch_bench(1 << 20 if args.full else 1 << 18)
     rows += kernel_bench.quantpack_bench(1 << 20 if args.full else 1 << 18)
+    rows += kernel_bench.routed_dispatch_bench(1 << 20)
 
     # roofline summary if the dry-run has produced results
     try:

@@ -3,8 +3,14 @@
 ``table_pallas`` (fused VMEM kernel, one table per function), ``table_pack``
 (ONE packed multi-function artifact + one fused kernel for the whole network),
 ``table_pack_ref`` (the pack's jnp oracle), ``quant_pack`` (the pack with
-int8/int16 entry codes + dequantize-on-read kernels), or ``quant_pack_ref``
-(the quantized pack's jnp oracle).  Configured per-model via
+int8/int16 entry codes + dequantize-on-read kernels), ``quant_pack_ref``
+(the quantized pack's jnp oracle), or the ``routed_*`` variants
+(``routed_pack`` / ``routed_pack_ref`` / ``routed_quant_pack`` /
+``routed_quant_pack_ref``), which serve the same packs through DYNAMIC
+per-row fn_id dispatch — the function identity is a runtime operand of a
+scalar-prefetch kernel, so mixed-function batches (MoE-style routed
+activations; see :meth:`ApproxConfig.routed_fn`) and every member's unary
+share one compiled executable.  Configured per-model via
 :class:`ApproxConfig`.
 """
 
@@ -16,21 +22,32 @@ from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.flow import cached_table
 from repro.core.functions import get as get_function
 
 from .jax_table import JaxTable, from_spec, make_table_fn
 from .table_pack import (QuantTablePack, TablePack, build_pack,
-                         build_quant_pack, make_pack_fn, make_quant_pack_fn)
+                         build_quant_pack, make_pack_fn, make_quant_pack_fn,
+                         make_routed_fn, make_routed_unary_fn)
 
 Mode = str  # "exact" | "table_ref" | "table_pallas" | "table_pack" |
-#             "table_pack_ref" | "quant_pack" | "quant_pack_ref"
+#             "table_pack_ref" | "quant_pack" | "quant_pack_ref" |
+#             "routed_pack" | "routed_pack_ref" | "routed_quant_pack" |
+#             "routed_quant_pack_ref"
 
+ROUTED_MODES = ("routed_pack", "routed_pack_ref", "routed_quant_pack",
+                "routed_quant_pack_ref")
 TABLE_MODES = ("table_ref", "table_pallas", "table_pack", "table_pack_ref",
-               "quant_pack", "quant_pack_ref")
+               "quant_pack", "quant_pack_ref") + ROUTED_MODES
 PACK_MODES = ("table_pack", "table_pack_ref")
 QUANT_PACK_MODES = ("quant_pack", "quant_pack_ref")
+# modes whose pack artifact is the quantized one (vs the f32 pack)
+_QUANT_BACKED = QUANT_PACK_MODES + ("routed_quant_pack", "routed_quant_pack_ref")
+# modes whose runtime is the Pallas kernels (vs a jnp oracle)
+_PALLAS_BACKED = ("table_pallas", "table_pack", "quant_pack", "routed_pack",
+                  "routed_quant_pack")
 
 
 def odd_extension(fn):
@@ -104,6 +121,26 @@ _NEVER_TABLED = {"relu", "identity"}
 _EXTRAPOLATE = {"gelu", "gelu_tanh", "silu", "softplus"}
 
 
+def _routed_exact(names):
+    """Exact-mode routed fallback: row-select over the exact activations."""
+    for n in names:
+        if not isinstance(n, str) or n not in _EXACT:
+            raise KeyError(f"exact-mode routing needs activation names, "
+                           f"got {n!r}")
+    uniq = tuple(dict.fromkeys(names))
+
+    def f(x):
+        sel = (len(names),) + (1,) * (x.ndim - 1)
+        y = None
+        for u in uniq:
+            yu = _EXACT[u](x)
+            mask = jnp.asarray(np.asarray([n == u for n in names])).reshape(sel)
+            y = yu if y is None else jnp.where(mask, yu, y)
+        return y
+
+    return f
+
+
 @dataclass(frozen=True)
 class ApproxConfig:
     """How the model evaluates its elementary functions.
@@ -172,18 +209,23 @@ class ApproxConfig:
         if self.exact_grad:
             fn = get_function(reg_name)
             exact_d1 = partial(fn.d1f, xp=jnp)
-        if self.mode in PACK_MODES + QUANT_PACK_MODES:
-            quant = self.mode in QUANT_PACK_MODES
-            pack = self.quant_pack() if quant else self.pack()
+        if self.mode in PACK_MODES + QUANT_PACK_MODES + ROUTED_MODES:
+            pack = self.quant_pack() if self.mode in _QUANT_BACKED else self.pack()
             if reg_name not in pack.names:
                 raise KeyError(
                     f"{reg_name!r} is not in pack_functions={pack.names}; add it "
                     f"to ApproxConfig.pack_functions to serve it from the pack")
-            make = make_quant_pack_fn if quant else make_pack_fn
+            if self.mode in ROUTED_MODES:
+                # dynamic dispatch with uniform fn_ids: the member identity is
+                # a runtime operand, so every unary shares ONE executable
+                make = make_routed_unary_fn
+            else:
+                make = make_quant_pack_fn if self.mode in _QUANT_BACKED \
+                    else make_pack_fn
             f = make(
                 pack,
                 reg_name,
-                use_pallas=(self.mode in ("table_pack", "quant_pack")),
+                use_pallas=(self.mode in _PALLAS_BACKED),
                 exact_d1=exact_d1,
                 extrapolate=(name in _EXTRAPOLATE),
             )
@@ -200,6 +242,51 @@ class ApproxConfig:
             # the full symmetric domain (tanh(x) = -tanh(-|x|) * sign(x))
             f = odd_extension(f)
         return f
+
+    def routed_fn(self, fns, *, extrapolate=None) -> Callable:
+        """Per-row dynamic dispatch: ``f(x)`` applies ``fns[i]`` to row i of
+        ``x`` (leading axis) in ONE call — MoE-style routed activations.
+
+        In table modes this is served by the scalar-prefetch routed kernels
+        (or their jnp oracles in ``*_ref`` modes) from one compiled
+        executable regardless of the routing; ``exact`` mode falls back to a
+        row-select over the exact transcendentals.  ``fns`` are activation
+        names (remapped like :meth:`unary`: ``sigmoid`` -> ``sigmoid_sym``,
+        ``exp`` -> ``exp_neg``); half-domain odd members (tanh) are mirrored
+        per row, so every row sees its full symmetric domain.
+        """
+        names = tuple(_TABLE_NAME.get(f, f) if isinstance(f, str) else f
+                      for f in fns)
+        if self.mode == "exact":
+            return _routed_exact(names)
+        if self.mode not in TABLE_MODES:
+            raise ValueError(f"unknown approx mode {self.mode!r}")
+        pack = self.quant_pack() if self.mode in _QUANT_BACKED else self.pack()
+        for n in names:
+            if isinstance(n, str) and n not in pack.names:
+                raise KeyError(
+                    f"{n!r} is not in pack_functions={pack.names}; add it to "
+                    f"ApproxConfig.pack_functions to route to it")
+        if extrapolate is None:
+            extrapolate = tuple(n in _EXTRAPOLATE for n in pack.names)
+        f = make_routed_fn(pack, names,
+                           use_pallas=(self.mode in _PALLAS_BACKED),
+                           extrapolate=extrapolate)
+        odd = np.asarray([isinstance(n, str) and n in _ODD_HALF_DOMAIN
+                          for n in names])
+        if not odd.any():
+            return f
+
+        def routed_odd(x):
+            # per-row odd_extension: mirror only the half-domain rows (same
+            # branchless where as the unary path; s is +-1 and piecewise
+            # constant, so tangents flow through f's custom_jvp untouched)
+            sel = (len(names),) + (1,) * (jnp.asarray(x).ndim - 1)
+            m = jnp.asarray(odd).reshape(sel)
+            s = jnp.where(m & (jnp.asarray(x) >= 0), -1.0, 1.0)
+            return s * f(s * x)
+
+        return routed_odd
 
     def softmax(self, x: jax.Array, axis: int = -1, where=None) -> jax.Array:
         """Numerically-shifted softmax; exponent optionally via the exp_neg table."""

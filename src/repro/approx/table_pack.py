@@ -36,6 +36,26 @@ from repro.core.table import TableSpec
 from .jax_table import select_interval
 
 
+def _member_id(names: Tuple[str, ...], fn) -> int:
+    """Resolve a name or integer fn_id to a VALIDATED member index.
+
+    Both unknown names and out-of-range integers raise ``KeyError`` naming the
+    offender and listing the registered members — the raw tuple-index
+    ``IndexError`` this replaces said neither.
+    """
+    if isinstance(fn, str):
+        try:
+            return names.index(fn)
+        except ValueError:
+            raise KeyError(f"function {fn!r} not in pack {names}") from None
+    fid = int(fn)
+    if not 0 <= fid < len(names):
+        raise KeyError(
+            f"fn_id {fid} out of range for pack with {len(names)} members "
+            f"{names}") from None
+    return fid
+
+
 class TablePack(NamedTuple):
     """Device-ready multi-function table artifact (all array leaves jnp, f32)."""
 
@@ -61,10 +81,16 @@ class TablePack(NamedTuple):
         return self.values.shape[0]
 
     def fn_id(self, name: str) -> int:
-        try:
-            return self.names.index(name)
-        except ValueError:
-            raise KeyError(f"function {name!r} not in pack {self.names}") from None
+        return _member_id(self.names, name)
+
+    def member_id(self, fn) -> int:
+        """Name or integer fn_id -> validated index (KeyError otherwise)."""
+        return _member_id(self.names, fn)
+
+    def routing_scalars(self) -> Tuple[np.ndarray, ...]:
+        """Prefetched scalar operands for dynamic fn_id dispatch: ``(n_arr,)``
+        with ``n_arr[f]`` the real sub-interval count of member ``f``."""
+        return (np.asarray(self.n_intervals, dtype=np.int32),)
 
 
 def from_layout(layout: PackLayout, dtype=jnp.float32) -> TablePack:
@@ -105,8 +131,8 @@ def build_pack(
     return pack_specs(specs)
 
 
-def _resolve(pack: TablePack, fn) -> int:
-    return pack.fn_id(fn) if isinstance(fn, str) else int(fn)
+def _resolve(pack, fn) -> int:
+    return pack.member_id(fn)
 
 
 def _select_pack_params(pack: TablePack, fid: int, xf: jax.Array):
@@ -206,10 +232,11 @@ class QuantTablePack(NamedTuple):
         return int(m8 + 2 * m16)
 
     def fn_id(self, name: str) -> int:
-        try:
-            return self.names.index(name)
-        except ValueError:
-            raise KeyError(f"function {name!r} not in pack {self.names}") from None
+        return _member_id(self.names, name)
+
+    def member_id(self, fn) -> int:
+        """Name or integer fn_id -> validated index (KeyError otherwise)."""
+        return _member_id(self.names, fn)
 
     def bounds_offset(self, fid: int) -> int:
         return sum(n + 1 for n in self.n_intervals[:fid])
@@ -219,6 +246,20 @@ class QuantTablePack(NamedTuple):
 
     def codes_for(self, fid: int) -> jax.Array:
         return self.codes8 if self.entry_bits[fid] == 8 else self.codes16
+
+    def routing_scalars(self) -> Tuple[np.ndarray, ...]:
+        """Prefetched scalar operands for dynamic fn_id dispatch.
+
+        The ragged static lane offsets (``bounds_offset`` / ``lane_offset``)
+        and the per-member width-group choice, as int32 vectors a
+        scalar-prefetch kernel indexes at runtime:
+        ``(n_arr, bounds_offsets, lane_offsets, entry_bits)``.
+        """
+        F = self.n_functions
+        return (np.asarray(self.n_intervals, dtype=np.int32),
+                np.asarray([self.bounds_offset(f) for f in range(F)], np.int32),
+                np.asarray([self.lane_offset(f) for f in range(F)], np.int32),
+                np.asarray(self.entry_bits, dtype=np.int32))
 
 
 def from_quant_layout(layout: QuantPackLayout) -> QuantTablePack:
@@ -423,6 +464,218 @@ def make_pack_fn(
         else:
             y = fwd_impl(x)
             slope = eval_pack_slope(pack, fid, x, extrapolate=extrapolate)
+        return y, slope * dx
+
+    return f
+
+
+# --------------------------------------------------------------------------------------
+# RoutedPack — per-row DYNAMIC fn_id dispatch (one executable, mixed-function batches).
+# --------------------------------------------------------------------------------------
+#
+# The pack kernels above specialize on a static fn_id: a batch mixing functions
+# (MoE-style routed activations) needs one compiled executable per member.  The
+# routed variant instead takes a per-row ``fn_ids`` vector as a RUNTIME operand
+# — ``repro.kernels.routed_pack_lookup`` prefetches it as a scalar operand
+# (PrefetchScalarGridSpec) and picks each row's metadata at dispatch time, so
+# ONE executable serves every routing.  The oracles here define the contract:
+# row i of the output is bit-identical to the static-fn_id dispatch of member
+# fn_ids[i] (the where-select literally picks the static per-member values).
+
+
+def resolve_fn_ids(pack, fn_ids, rows: int) -> jax.Array:
+    """Normalize per-row routing ids to a clipped ``(rows,)`` int32 vector.
+
+    Accepts a single name/int (broadcast to every row), a sequence of
+    names/ints or a concrete array (each validated against the pack —
+    ``KeyError`` on unknowns), or a TRACED int vector (e.g. a router output
+    under jit).  Traced ids cannot be validated at trace time; they are
+    clamped to the member range, matching the kernels' clamped metadata
+    reads.
+    """
+    if isinstance(fn_ids, (str, int, np.integer)):
+        ids = np.full((rows,), pack.member_id(fn_ids), dtype=np.int32)
+    elif isinstance(fn_ids, jax.core.Tracer):
+        ids = jnp.asarray(fn_ids, dtype=jnp.int32)
+    else:  # concrete sequence/array (names or ints): validate every id
+        seq = fn_ids if isinstance(fn_ids, (list, tuple)) else np.asarray(fn_ids)
+        ids = np.asarray([pack.member_id(f) for f in seq], dtype=np.int32)
+    if ids.shape != (rows,):
+        raise ValueError(
+            f"fn_ids shape {ids.shape} does not match the {rows} leading rows "
+            f"of x (one function id per row)")
+    return jnp.clip(jnp.asarray(ids, dtype=jnp.int32), 0, pack.n_functions - 1)
+
+
+def routed_extr_flags(pack, extrapolate) -> np.ndarray:
+    """Per-member edge-handling flags as the int32 runtime operand the routed
+    kernels gather by fn_id: a single bool applies to every member, a sequence
+    gives one flag per member (linear-asymptote members extrapolate, flat ones
+    keep the hardware clamp)."""
+    if isinstance(extrapolate, (bool, np.bool_, int)):
+        flags = (bool(extrapolate),) * pack.n_functions
+    else:
+        flags = tuple(bool(e) for e in extrapolate)
+        if len(flags) != pack.n_functions:
+            raise ValueError(
+                f"extrapolate needs one flag per member ({pack.n_functions}), "
+                f"got {len(flags)}")
+    return np.asarray(flags, dtype=np.int32)
+
+
+def _routed_where(pack, fn_ids, x, member_eval, extrapolate):
+    """Row-select over the static per-member evaluations (the routed oracle)."""
+    ids = resolve_fn_ids(pack, fn_ids, x.shape[0])
+    extr = routed_extr_flags(pack, extrapolate)
+    sel = (x.shape[0],) + (1,) * (x.ndim - 1)
+    y = None
+    for f in range(pack.n_functions):
+        yf = member_eval(f, bool(extr[f]))
+        y = yf if y is None else jnp.where((ids == f).reshape(sel), yf, y)
+    return y
+
+
+def eval_routed_ref(pack: TablePack, fn_ids, x: jax.Array, *,
+                    extrapolate=False) -> jax.Array:
+    """Pure-jnp routed oracle: row i of ``x`` through member ``fn_ids[i]`` —
+    bit-identical to the corresponding static dispatches."""
+    return _routed_where(
+        pack, fn_ids, x,
+        lambda f, e: eval_pack_ref(pack, f, x, extrapolate=e), extrapolate)
+
+
+def eval_routed_slope(pack: TablePack, fn_ids, x: jax.Array, *,
+                      extrapolate=False) -> jax.Array:
+    """d/dx of the routed surrogate (per-row static table slopes)."""
+    return _routed_where(
+        pack, fn_ids, x,
+        lambda f, e: eval_pack_slope(pack, f, x, extrapolate=e), extrapolate)
+
+
+def eval_routed_quant_ref(pack: QuantTablePack, fn_ids, x: jax.Array, *,
+                          extrapolate=False) -> jax.Array:
+    """Routed dequantize-on-read oracle over the quantized pack."""
+    return _routed_where(
+        pack, fn_ids, x,
+        lambda f, e: eval_quant_pack_ref(pack, f, x, extrapolate=e), extrapolate)
+
+
+def eval_routed_quant_slope(pack: QuantTablePack, fn_ids, x: jax.Array, *,
+                            extrapolate=False) -> jax.Array:
+    """d/dx of the routed quantized surrogate."""
+    return _routed_where(
+        pack, fn_ids, x,
+        lambda f, e: eval_quant_pack_slope(pack, f, x, extrapolate=e),
+        extrapolate)
+
+
+def make_routed_fn(
+    pack,
+    fn_ids,
+    *,
+    use_pallas: bool = True,
+    extrapolate=False,
+):
+    """Differentiable per-row routed ``f(x)``: row i of ``x`` (leading axis)
+    is served by member ``fn_ids[i]`` of the pack — f32 (:class:`TablePack`)
+    or quantized (:class:`QuantTablePack`) — from ONE compiled executable.
+
+    ``fn_ids`` may be names/ints (validated here) or a traced int vector (an
+    MoE router output): the ids are a runtime operand of the scalar-prefetch
+    kernels, so re-routing never recompiles.  ``extrapolate`` is one flag or a
+    per-member sequence (mixed edge semantics in a single call).  The tangent
+    is the per-row table slope (what the hardware computes), fused with the
+    value pass in the Pallas path.
+    """
+    quant = isinstance(pack, QuantTablePack)
+    if use_pallas:
+        from repro.kernels.routed_pack_lookup import (
+            routed_pack_grad_pallas, routed_pack_lookup_pallas,
+            routed_quant_pack_grad_pallas, routed_quant_pack_lookup_pallas)
+
+        lookup = routed_quant_pack_lookup_pallas if quant else \
+            routed_pack_lookup_pallas
+        gradk = routed_quant_pack_grad_pallas if quant else \
+            routed_pack_grad_pallas
+        fwd_impl = lambda v: lookup(pack, fn_ids, v, extrapolate=extrapolate)
+        fused_grad = lambda v: gradk(pack, fn_ids, v, extrapolate=extrapolate)
+    else:
+        ref = eval_routed_quant_ref if quant else eval_routed_ref
+        slope_ref = eval_routed_quant_slope if quant else eval_routed_slope
+        fwd_impl = lambda v: ref(pack, fn_ids, v, extrapolate=extrapolate)
+        fused_grad = None
+
+    @jax.custom_jvp
+    def f(x):
+        return fwd_impl(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        if fused_grad is not None:
+            y, slope = fused_grad(x)
+        else:
+            y = fwd_impl(x)
+            slope = slope_ref(pack, fn_ids, x, extrapolate=extrapolate)
+        return y, slope * dx
+
+    return f
+
+
+def make_routed_unary_fn(
+    pack,
+    name,
+    *,
+    use_pallas: bool = True,
+    exact_d1=None,
+    extrapolate: bool = False,
+):
+    """Shape-agnostic unary ``f(x)`` served through the ROUTED dispatch path
+    with uniform fn_ids — what ``ApproxConfig(mode="routed_pack").unary``
+    builds.  Unlike :func:`make_pack_fn`, the member identity is a runtime
+    operand: every member's unary shares one compiled executable per input
+    shape.  The jnp fallback (``use_pallas=False``) evaluates the static
+    oracle — bit-identical to the routed kernel by the dispatch contract.
+    """
+    quant = isinstance(pack, QuantTablePack)
+    fid = pack.member_id(name)
+    ids = jnp.full((1,), fid, dtype=jnp.int32)
+    if use_pallas:
+        from repro.kernels.routed_pack_lookup import (
+            routed_pack_grad_pallas, routed_pack_lookup_pallas,
+            routed_quant_pack_grad_pallas, routed_quant_pack_lookup_pallas)
+
+        lookup = routed_quant_pack_lookup_pallas if quant else \
+            routed_pack_lookup_pallas
+        gradk = routed_quant_pack_grad_pallas if quant else \
+            routed_pack_grad_pallas
+        fwd_impl = lambda v: lookup(
+            pack, ids, v.reshape(1, -1), extrapolate=extrapolate
+        ).reshape(v.shape)
+        fused_grad = lambda v: tuple(
+            r.reshape(v.shape) for r in gradk(
+                pack, ids, v.reshape(1, -1), extrapolate=extrapolate))
+    else:
+        ref = eval_quant_pack_ref if quant else eval_pack_ref
+        slope_ref = eval_quant_pack_slope if quant else eval_pack_slope
+        fwd_impl = lambda v: ref(pack, fid, v, extrapolate=extrapolate)
+        fused_grad = None
+
+    @jax.custom_jvp
+    def f(x):
+        return fwd_impl(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        if exact_d1 is not None:
+            y = fwd_impl(x)
+            slope = exact_d1(x)
+        elif fused_grad is not None:
+            y, slope = fused_grad(x)
+        else:
+            y = fwd_impl(x)
+            slope = slope_ref(pack, fid, x, extrapolate=extrapolate)
         return y, slope * dx
 
     return f

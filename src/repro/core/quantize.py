@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Optional
 
 import numpy as np
@@ -354,7 +355,22 @@ def plan_quant_member(
     code, so at loose budgets an int8 member's TOTAL bytes (codes + meta) can
     exceed int16's; force ``dtype='int16'`` when total VMEM residency is the
     binding constraint (the kernel_bench report shows both ratios).
+
+    Registry-name plans are memoized process-wide (the ``cached_table``
+    idiom): the refinement search is the expensive half of building a
+    quantized pack, and packs/tests re-request the same members.
     """
+    if isinstance(fn, str):
+        return _plan_cached(fn, e_a, lo, hi, algorithm, omega, rho, dtype, cap)
+    return _plan(fn, e_a, lo, hi, algorithm, omega, rho, dtype, cap)
+
+
+@lru_cache(maxsize=256)
+def _plan_cached(name, e_a, lo, hi, algorithm, omega, rho, dtype, cap):
+    return _plan(name, e_a, lo, hi, algorithm, omega, rho, dtype, cap)
+
+
+def _plan(fn, e_a, lo, hi, algorithm, omega, rho, dtype, cap) -> QuantMember:
     if not (0.0 < rho < 1.0):
         raise ValueError("rho must be in (0, 1)")
     if dtype not in ("auto", "int8", "int16"):

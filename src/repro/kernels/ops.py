@@ -7,6 +7,8 @@ import jax
 from repro.approx.jax_table import JaxTable
 from repro.approx.table_pack import QuantTablePack, TablePack
 
+from .routed_pack_lookup import (routed_pack_lookup_pallas,
+                                 routed_quant_pack_lookup_pallas)
 from .table_lookup import table_lookup_pallas
 from .table_pack_lookup import quant_pack_lookup_pallas, table_pack_lookup_pallas
 
@@ -41,3 +43,22 @@ def quant_pack_lookup(pack: QuantTablePack, fn, x: jax.Array, *,
     Differentiability lives in ``repro.approx.make_quant_pack_fn``.
     """
     return quant_pack_lookup_pallas(pack, fn, x, extrapolate=extrapolate)
+
+
+def routed_pack_lookup(pack: TablePack, fn_ids, x: jax.Array, *,
+                       extrapolate=False) -> jax.Array:
+    """DYNAMIC per-row dispatch: row i of ``x`` through member ``fn_ids[i]``.
+
+    ``fn_ids`` is a runtime operand (scalar-prefetched), so one compiled
+    executable serves every mixed-function batch — no per-member
+    specialization.  Differentiability lives in ``repro.approx.make_routed_fn``.
+    """
+    return routed_pack_lookup_pallas(pack, fn_ids, x, extrapolate=extrapolate)
+
+
+def routed_quant_pack_lookup(pack: QuantTablePack, fn_ids, x: jax.Array, *,
+                             extrapolate=False) -> jax.Array:
+    """Routed dispatch over the quantized pack (dequantize-on-read, dynamic
+    width-group select per row)."""
+    return routed_quant_pack_lookup_pallas(pack, fn_ids, x,
+                                           extrapolate=extrapolate)

@@ -132,7 +132,9 @@ def _call_grad(x2d, bounds, invd, base, segs, values, *, block_rows, interpret,
 def _prep(pack: TablePack, fn, x, lane, block_rows, interpret):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    fid = pack.fn_id(fn) if isinstance(fn, str) else int(fn)
+    # member_id validates ints too: an out-of-range fn_id raises a KeyError
+    # naming the pack members instead of an opaque tuple IndexError below
+    fid = pack.member_id(fn)
     x2d, block, n = tile_activations(x, lane, block_rows)
     return fid, x2d, block, n, interpret
 

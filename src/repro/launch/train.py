@@ -15,6 +15,7 @@ import argparse
 
 import jax
 
+from repro.approx import TABLE_MODES
 from repro.models import ShapeSpec, build_model, get_config
 from repro.optim import adamw
 from repro.train.loop import TrainConfig, run
@@ -41,13 +42,14 @@ def main():
     ap.add_argument("--mesh", choices=["none", "debug", "prod", "multipod"],
                     default="none")
     ap.add_argument("--approx-mode",
-                    choices=["exact", "table_ref", "table_pallas", "table_pack",
-                             "table_pack_ref", "quant_pack", "quant_pack_ref"],
+                    choices=["exact", *TABLE_MODES],
                     default=None,
                     help="nonlinearity backend; table_pack = one fused "
                          "multi-function pack + kernel for the whole network, "
                          "quant_pack = the same pack with int8/int16 entries "
-                         "dequantized on read")
+                         "dequantized on read, routed_* = the same packs with "
+                         "dynamic per-row fn_id dispatch (one executable for "
+                         "every member)")
     ap.add_argument("--approx-ea", type=float, default=None,
                     help="override the config's error budget E_a")
     args = ap.parse_args()

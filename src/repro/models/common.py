@@ -113,3 +113,17 @@ def softcap(x: jax.Array, cap: float, tanh_fn=None) -> jax.Array:
         return x
     t = jnp.tanh if tanh_fn is None else tanh_fn
     return cap * t(x / cap)
+
+
+def routed_activation(approx, names) -> Any:
+    """MoE-style slot-routed activations: ``f(x)`` applies ``names[i]`` to
+    row i of a slot-major tensor ``(n_slots, ...)`` in ONE call.
+
+    ``approx`` is the model's :class:`repro.approx.ApproxConfig`.  In table
+    modes the dispatch runs through the scalar-prefetch routed kernels — the
+    slot->function assignment is a runtime operand, so one compiled executable
+    serves every routing (vs one specialization per member with the static
+    pack path); exact mode falls back to a row-select over the exact
+    activations.  See examples/serve_decode.py ``--routed-demo``.
+    """
+    return approx.routed_fn(tuple(names))

@@ -1,0 +1,233 @@
+"""Cross-mode conformance matrix: EVERY ApproxConfig table mode x EVERY
+registered function must honor the paper's |f(x) - approx(x)| <= Ea contract,
+every kernel mode must reproduce its jnp oracle bit for bit under jit, and
+every mode's differentiable wrapper must have a finite grad path.
+
+This is the one table a reviewer reads to trust a new mode: a mode joins
+``repro.approx.TABLE_MODES`` (checked here for completeness) and inherits the
+whole matrix.  The fast tier runs a subsampled matrix (FAST_FUNCS x all modes
+plus the f64 design-layer row); the full matrix rides the ``slow`` marker and
+the nightly CI job.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx import TABLE_MODES, ApproxConfig, from_quant_layout, from_spec, pack_specs
+from repro.approx.activations import _EXACT, _TABLE_NAME
+from repro.approx.jax_table import eval_table_ref, make_table_fn
+from repro.approx.table_pack import (
+    eval_pack_ref,
+    eval_quant_pack_ref,
+    eval_routed_quant_ref,
+    eval_routed_ref,
+    make_pack_fn,
+    make_quant_pack_fn,
+    make_routed_unary_fn,
+)
+from repro.core import cached_table, function_names, get_function, plan_quant_member, quant_pack_layout
+from repro.kernels.routed_pack_lookup import (
+    routed_pack_lookup_pallas,
+    routed_quant_pack_lookup_pallas,
+)
+from repro.kernels.table_lookup import table_lookup_pallas
+from repro.kernels.table_pack_lookup import quant_pack_lookup_pallas, table_pack_lookup_pallas
+
+EA = 1e-4
+
+MODES = tuple(m for m in TABLE_MODES)
+# kernel mode -> the jnp oracle it must reproduce bitwise
+KERNEL_ORACLE = {
+    "table_pallas": "table_ref",
+    "table_pack": "table_pack_ref",
+    "quant_pack": "quant_pack_ref",
+    "routed_pack": "routed_pack_ref",
+    "routed_quant_pack": "routed_quant_pack_ref",
+}
+FUNCS = tuple(function_names())
+# the fast-tier subsample: one easy, one flat-asymptote, one log-domain member
+FAST_FUNCS = ("gelu", "tanh", "log")
+
+GRID_N = 8192  # dense-grid points; reshaped (16, 512) for the routed modes
+ROWS = 16
+
+_CACHE = {}
+
+
+def _spec(name):
+    return cached_table(name, EA)
+
+
+def _pack():
+    if "pack" not in _CACHE:
+        _CACHE["pack"] = pack_specs([_spec(n) for n in FUNCS])
+    return _CACHE["pack"]
+
+
+def _qpack():
+    if "qpack" not in _CACHE:
+        _CACHE["qpack"] = from_quant_layout(quant_pack_layout(
+            [plan_quant_member(n, EA) for n in FUNCS]))
+    return _CACHE["qpack"]
+
+
+def _rows(x):
+    return x.reshape(ROWS, -1)
+
+
+def approx_eval(mode: str, name: str, x: jnp.ndarray) -> np.ndarray:
+    """Evaluate ``name`` through ``mode``'s runtime (f32), any grid size that
+    tiles into ROWS rows."""
+    if mode == "table_ref":
+        out = jax.jit(lambda v: eval_table_ref(from_spec(_spec(name)), v))(x)
+    elif mode == "table_pallas":
+        out = table_lookup_pallas(from_spec(_spec(name)), x)
+    elif mode == "table_pack_ref":
+        out = jax.jit(lambda v: eval_pack_ref(_pack(), name, v))(x)
+    elif mode == "table_pack":
+        out = table_pack_lookup_pallas(_pack(), name, x)
+    elif mode == "quant_pack_ref":
+        out = jax.jit(lambda v: eval_quant_pack_ref(_qpack(), name, v))(x)
+    elif mode == "quant_pack":
+        out = quant_pack_lookup_pallas(_qpack(), name, x)
+    elif mode == "routed_pack_ref":
+        out = jax.jit(lambda v: eval_routed_ref(
+            _pack(), name, _rows(v)))(x).reshape(x.shape)
+    elif mode == "routed_pack":
+        out = routed_pack_lookup_pallas(_pack(), name,
+                                        _rows(x)).reshape(x.shape)
+    elif mode == "routed_quant_pack_ref":
+        out = jax.jit(lambda v: eval_routed_quant_ref(
+            _qpack(), name, _rows(v)))(x).reshape(x.shape)
+    elif mode == "routed_quant_pack":
+        out = routed_quant_pack_lookup_pallas(_qpack(), name,
+                                              _rows(x)).reshape(x.shape)
+    else:  # pragma: no cover - the completeness test keeps this unreachable
+        raise ValueError(mode)
+    return np.asarray(out, dtype=np.float64)
+
+
+def approx_fn(mode: str, name: str):
+    """The mode's differentiable unary for ``name`` (table-slope tangent)."""
+    if mode in ("table_ref", "table_pallas"):
+        return make_table_fn(from_spec(_spec(name)),
+                             use_pallas=(mode == "table_pallas"))
+    pallas = not mode.endswith("_ref")
+    if mode.startswith("routed"):
+        pack = _qpack() if "quant" in mode else _pack()
+        return make_routed_unary_fn(pack, name, use_pallas=pallas)
+    if mode.startswith("quant"):
+        return make_quant_pack_fn(_qpack(), name, use_pallas=pallas)
+    return make_pack_fn(_pack(), name, use_pallas=pallas)
+
+
+def mode_fn_params():
+    for m in MODES:
+        for f in FUNCS:
+            marks = () if f in FAST_FUNCS else (pytest.mark.slow,)
+            yield pytest.param(m, f, marks=marks, id=f"{m}-{f}")
+
+
+def grid(name, n=GRID_N):
+    lo, hi = get_function(name).interval
+    return np.linspace(lo, hi, n + 1)[:-1]
+
+
+def probe(name, n=2048):
+    """Domain + deep out-of-range tails (exercises clamp/extrapolation)."""
+    lo, hi = get_function(name).interval
+    span = hi - lo
+    rng = np.random.default_rng(5)
+    return rng.uniform(lo - 0.5 * span, hi + 0.5 * span, n).astype(np.float32)
+
+
+class TestModeMatrixComplete:
+    def test_matrix_covers_every_mode(self):
+        """A new ApproxConfig mode must join this suite's matrix."""
+        assert set(MODES) == set(TABLE_MODES)
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError, match="unknown approx mode"):
+            ApproxConfig(mode="bogus").unary("gelu")
+
+
+@pytest.mark.parametrize("mode,name", mode_fn_params())
+def test_error_bound(mode, name):
+    """|f(x) - approx(x)| <= Ea on a dense in-domain grid, per mode x fn.
+
+    The table guarantee is proven in f64 (see TestDesignLayerF64); the f32
+    runtime adds gather/FMA rounding relative to the function's magnitude
+    (the quant-pack convention: Ea * 1.02 + 1e-5 * scale).
+    """
+    xs = grid(name)
+    want = np.asarray(get_function(name).f(xs))
+    got = approx_eval(mode, name, jnp.asarray(xs, jnp.float32))
+    scale = max(1.0, float(np.max(np.abs(want))))
+    err = float(np.max(np.abs(got - want)))
+    assert err <= EA * 1.02 + 1e-5 * scale, (mode, name, err)
+
+
+@pytest.mark.parametrize(
+    "mode,name",
+    [pytest.param(m, f,
+                  marks=() if f in FAST_FUNCS else (pytest.mark.slow,),
+                  id=f"{m}-{f}")
+     for m in KERNEL_ORACLE for f in FUNCS])
+def test_kernel_oracle_bit_parity(mode, name):
+    """Every kernel mode reproduces its jnp oracle bitwise under jit,
+    including out-of-range saturation."""
+    x = jnp.asarray(probe(name))
+    got = approx_eval(mode, name, x)
+    want = approx_eval(KERNEL_ORACLE[mode], name, x)
+    np.testing.assert_array_equal(got, want, err_msg=f"{mode} {name}")
+
+
+@pytest.mark.parametrize("mode,name", mode_fn_params())
+def test_grad_path_finite(mode, name):
+    """jax.grad through every mode's differentiable wrapper is finite over
+    the domain (the custom_jvp table-slope tangent must never NaN)."""
+    f = approx_fn(mode, name)
+    x = jnp.asarray(grid(name, n=1024), jnp.float32)
+    if mode.startswith("routed"):
+        x = x.reshape(ROWS, -1)
+    y = np.asarray(f(x))
+    g = np.asarray(jax.grad(lambda v: f(v).sum())(x))
+    assert np.isfinite(y).all(), (mode, name, "value")
+    assert np.isfinite(g).all(), (mode, name, "grad")
+
+
+class TestDesignLayerF64:
+    """The f64 rows of the matrix: the design-flow artifacts themselves
+    (TableSpec / QuantMember oracles) meet Ea everywhere — the guarantee the
+    f32 runtimes inherit."""
+
+    @pytest.mark.parametrize("name", FUNCS)
+    def test_table_spec_bound(self, name):
+        assert _spec(name).max_error_on_grid(n=20_001) <= EA * (1 + 1e-6)
+
+    @pytest.mark.parametrize("name", FUNCS)
+    def test_quant_member_bound(self, name):
+        m = plan_quant_member(name, EA)
+        assert m.max_error_on_grid(n=20_001) <= EA * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_unary_activation_bound(mode):
+    """The ApproxConfig.unary layer (name remaps + odd extension) holds the
+    bound on each activation's FULL serving domain — notably tanh on both
+    signs (the odd extension) and sigmoid via the symmetric table."""
+    cfg = ApproxConfig(mode=mode, e_a=EA)
+    for act in ("gelu", "tanh", "sigmoid", "exp"):
+        reg = _TABLE_NAME.get(act, act)
+        lo, hi = get_function(reg).interval
+        if act == "tanh":
+            lo, hi = lo, -lo  # half-domain table, odd-extended at serve time
+        xs = np.linspace(lo, hi, ROWS * 256 + 1)[:-1]
+        want = np.asarray(_EXACT[act](jnp.asarray(xs)), dtype=np.float64)
+        got = np.asarray(jax.jit(cfg.unary(act))(jnp.asarray(xs, jnp.float32)),
+                         dtype=np.float64)
+        scale = max(1.0, float(np.max(np.abs(want))))
+        err = float(np.max(np.abs(got - want)))
+        assert err <= EA * 1.02 + 1e-5 * scale, (mode, act, err)

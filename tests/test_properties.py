@@ -12,15 +12,27 @@ Invariants from the paper:
      within the rounding share of the budget, refinement never breaks the
      partition or the stored piecewise-linear function, and the end-to-end
      |f - dequantized table| stays <= Ea for any (function, Ea, rho, width).
+  7. Routed dispatch: for ARBITRARY per-row fn_ids assignments, the routed
+     kernels/oracles are bit-identical to the corresponding static-fn_id
+     dispatches, for both the f32 and the quantized pack.
+
+Profiles: the default ``ci`` profile keeps the unannotated (routing) tests
+cheap; ``HYPOTHESIS_PROFILE=nightly`` (the scheduled CI job) runs them with
+more examples.  Tests with explicit ``max_examples`` are unaffected.
 """
 
 import math
+import os
 
 import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.register_profile("nightly", max_examples=75, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
 
 from repro.core import (
     FixedPointFormat,
@@ -173,6 +185,81 @@ def test_quant_end_to_end_error_bound(name, ea_exp, rho, bits):
     refined = refine_for_quantization(ts, quant_rounding_limit(tol, bits))
     m = quantize_spec(refined, tol, bits, rho=rho, e_a=ea)
     assert m.max_error_on_grid(n=20_001) <= ea * (1 + 1e-6)
+
+
+# ------------------------------------------------------------------------------
+# 7. Routed dispatch == static dispatch, bitwise, for arbitrary routings.
+# ------------------------------------------------------------------------------
+
+ROUTED_FUNCS = ("gelu", "tanh", "log", "sigmoid")
+ROUTED_EA = 1e-3  # loose budget: tiny tables, fast pack builds
+_ROUTED_PACKS = {}
+
+
+def _routed_pack(kind):
+    if kind not in _ROUTED_PACKS:
+        import jax.numpy as jnp  # noqa: F401  (jax import deferred to first use)
+        from repro.approx import from_quant_layout, pack_specs
+        from repro.core import cached_table, plan_quant_member, quant_pack_layout
+
+        if kind == "f32":
+            _ROUTED_PACKS[kind] = pack_specs(
+                [cached_table(n, ROUTED_EA) for n in ROUTED_FUNCS])
+        else:
+            _ROUTED_PACKS[kind] = from_quant_layout(quant_pack_layout(
+                [plan_quant_member(n, ROUTED_EA) for n in ROUTED_FUNCS]))
+    return _ROUTED_PACKS[kind]
+
+
+def _routed_case_check(kind, ids, seed, extr):
+    import jax
+    import jax.numpy as jnp
+    from repro.approx.table_pack import eval_routed_quant_ref, eval_routed_ref
+    from repro.kernels.routed_pack_lookup import (
+        routed_pack_lookup_pallas, routed_quant_pack_lookup_pallas)
+    from repro.kernels.table_pack_lookup import (
+        quant_pack_lookup_pallas, table_pack_lookup_pallas)
+
+    pack = _routed_pack(kind)
+    routed = routed_pack_lookup_pallas if kind == "f32" else \
+        routed_quant_pack_lookup_pallas
+    static = table_pack_lookup_pallas if kind == "f32" else \
+        quant_pack_lookup_pallas
+    oracle = eval_routed_ref if kind == "f32" else eval_routed_quant_ref
+
+    x = jnp.asarray(np.random.default_rng(seed)
+                    .normal(0, 6, (len(ids), 96)).astype(np.float32))
+    got = np.asarray(routed(pack, ids, x, extrapolate=extr))
+    # bit-identical to the per-row STATIC dispatches...
+    for r, fid in enumerate(ids):
+        want = np.asarray(static(pack, fid, x[r], extrapolate=extr))
+        np.testing.assert_array_equal(got[r], want, err_msg=f"row {r} fid {fid}")
+    # ...and to the jnp where-select oracle, under jit
+    ref = np.asarray(jax.jit(
+        lambda v: oracle(pack, ids, v, extrapolate=extr))(x))
+    np.testing.assert_array_equal(got, ref)
+
+
+@settings(deadline=None)  # examples count comes from the ci/nightly profile
+@given(
+    ids=st.lists(st.integers(0, len(ROUTED_FUNCS) - 1), min_size=1, max_size=5),
+    seed=st.integers(0, 2**31 - 1),
+    extr=st.booleans(),
+)
+def test_routed_f32_bit_identical_to_static(ids, seed, extr):
+    """Invariant 7, f32 pack: any routing == the static dispatches, bitwise."""
+    _routed_case_check("f32", ids, seed, extr)
+
+
+@settings(deadline=None)
+@given(
+    ids=st.lists(st.integers(0, len(ROUTED_FUNCS) - 1), min_size=1, max_size=5),
+    seed=st.integers(0, 2**31 - 1),
+    extr=st.booleans(),
+)
+def test_routed_quant_bit_identical_to_static(ids, seed, extr):
+    """Invariant 7, quantized pack (dequantize-on-read + width groups)."""
+    _routed_case_check("quant", ids, seed, extr)
 
 
 @settings(max_examples=30, deadline=None)

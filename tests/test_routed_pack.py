@@ -1,0 +1,389 @@
+"""RoutedPack validation: dynamic per-row fn_id dispatch must be BIT-IDENTICAL
+(under jit) to the corresponding static-fn_id dispatches for every registered
+function, in both the f32 and the quantized pack; re-routing must reuse one
+compiled executable; and member lookup must fail loudly (KeyError naming the
+members) for unknown names AND out-of-range integer ids."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx import ApproxConfig, from_quant_layout, make_routed_fn, pack_specs
+from repro.approx.table_pack import (
+    eval_pack_ref,
+    eval_quant_pack_ref,
+    eval_routed_quant_ref,
+    eval_routed_quant_slope,
+    eval_routed_ref,
+    eval_routed_slope,
+    resolve_fn_ids,
+    routed_extr_flags,
+)
+from repro.core import cached_table, function_names, plan_quant_member, quant_pack_layout
+from repro.kernels.routed_pack_lookup import (
+    routed_pack_grad_pallas,
+    routed_pack_lookup_pallas,
+    routed_quant_pack_grad_pallas,
+    routed_quant_pack_lookup_pallas,
+    tile_routed_rows,
+)
+from repro.kernels.table_pack_lookup import (
+    quant_pack_grad_pallas,
+    quant_pack_lookup_pallas,
+    table_pack_grad_pallas,
+    table_pack_lookup_pallas,
+)
+
+RNG = np.random.default_rng(17)
+
+EA = 1e-4
+
+_CACHE = {}
+
+
+def f32_pack():
+    if "f32" not in _CACHE:
+        _CACHE["f32"] = pack_specs([cached_table(n, EA)
+                                    for n in function_names()])
+    return _CACHE["f32"]
+
+
+def quant_pack():
+    if "quant" not in _CACHE:
+        _CACHE["quant"] = from_quant_layout(quant_pack_layout(
+            [plan_quant_member(n, EA) for n in function_names()]))
+    return _CACHE["quant"]
+
+
+def mixed_width_pack():
+    """Forced int8 + int16 members in one pack: the runtime width-group
+    select must pick the right codes vector per row."""
+    if "mixed" not in _CACHE:
+        dtypes = {"gelu": "int8", "tanh": "int16", "log": "int16",
+                  "sigmoid": "int8"}
+        _CACHE["mixed"] = from_quant_layout(quant_pack_layout(
+            [plan_quant_member(n, EA, dtype=d) for n, d in dtypes.items()]))
+    return _CACHE["mixed"]
+
+
+def domain_probe(pack, fid, n=512):
+    """One row spanning member fid's table domain plus out-of-range tails."""
+    if hasattr(pack, "n_max"):  # TablePack: padded boundary planes
+        lo = float(pack.boundaries[fid, 0])
+        hi = float(pack.boundaries[fid, pack.n_intervals[fid]])
+    else:
+        bo = pack.bounds_offset(fid)
+        lo = float(pack.boundaries[bo])
+        hi = float(pack.boundaries[bo + pack.n_intervals[fid]])
+    span = hi - lo
+    return RNG.uniform(lo - 0.5 * span, hi + 0.5 * span, n).astype(np.float32)
+
+
+KERNELS = {
+    "f32": (f32_pack, routed_pack_lookup_pallas, table_pack_lookup_pallas,
+            routed_pack_grad_pallas, table_pack_grad_pallas, eval_routed_ref,
+            eval_routed_slope),
+    "quant": (quant_pack, routed_quant_pack_lookup_pallas,
+              quant_pack_lookup_pallas, routed_quant_pack_grad_pallas,
+              quant_pack_grad_pallas, eval_routed_quant_ref,
+              eval_routed_quant_slope),
+}
+
+
+@pytest.mark.parametrize("kind", ["f32", "quant"])
+class TestRoutedBitParity:
+    """Acceptance: routed == static, bitwise, for EVERY registered function."""
+
+    def test_every_function_matches_static_dispatch(self, kind):
+        build, routed, static, *_ = KERNELS[kind]
+        pack = build()
+        for fid in range(pack.n_functions):
+            x = jnp.asarray(np.stack([domain_probe(pack, fid)] * 2))
+            ids = np.full((2,), fid, np.int64)
+            for ex in (False, True):
+                got = routed(pack, ids, x, extrapolate=ex)
+                want = static(pack, fid, x, extrapolate=ex)
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(want),
+                    err_msg=f"{pack.names[fid]} ex={ex}")
+
+    def test_mixed_rows_match_per_row_static(self, kind):
+        build, routed, static, _, _, oracle, _ = KERNELS[kind]
+        pack = build()
+        ids = list(range(pack.n_functions))
+        x = jnp.asarray(np.stack([domain_probe(pack, f) for f in ids]))
+        got = np.asarray(routed(pack, ids, x))
+        for r, fid in enumerate(ids):
+            want = np.asarray(static(pack, fid, x[r]))
+            np.testing.assert_array_equal(got[r], want,
+                                          err_msg=pack.names[fid])
+        # and the jnp where-select oracle reproduces the kernel bitwise
+        ref = jax.jit(lambda v: oracle(pack, ids, v))(x)
+        np.testing.assert_array_equal(got, np.asarray(ref))
+
+    def test_grad_kernel_matches_static_and_oracle(self, kind):
+        build, _, _, routed_g, static_g, oracle, oracle_slope = KERNELS[kind]
+        pack = build()
+        ids = [(3 * r) % pack.n_functions for r in range(5)]
+        x = jnp.asarray(np.stack([domain_probe(pack, f, n=256) for f in ids]))
+        for ex in (False, True):
+            y, dy = routed_g(pack, ids, x, extrapolate=ex)
+            for r, fid in enumerate(ids):
+                ys, dys = static_g(pack, fid, x[r], extrapolate=ex)
+                np.testing.assert_array_equal(np.asarray(y[r]), np.asarray(ys))
+                np.testing.assert_array_equal(np.asarray(dy[r]),
+                                              np.asarray(dys))
+            np.testing.assert_array_equal(
+                np.asarray(y),
+                np.asarray(jax.jit(
+                    lambda v, e=ex: oracle(pack, ids, v, extrapolate=e))(x)))
+            np.testing.assert_array_equal(
+                np.asarray(dy),
+                np.asarray(jax.jit(
+                    lambda v, e=ex: oracle_slope(pack, ids, v,
+                                                 extrapolate=e))(x)))
+
+    def test_per_member_extrapolate_flags(self, kind):
+        """Mixed edge semantics in one call: each row honors ITS member's
+        extrapolate flag, matching the per-row static dispatch."""
+        build, routed, static, *_ = KERNELS[kind]
+        pack = build()
+        F = pack.n_functions
+        flags = tuple(f % 2 == 0 for f in range(F))
+        ids = list(range(F))
+        x = jnp.asarray(np.stack([domain_probe(pack, f, n=128) for f in ids]))
+        got = np.asarray(routed(pack, ids, x, extrapolate=flags))
+        for r, fid in enumerate(ids):
+            want = np.asarray(static(pack, fid, x[r],
+                                     extrapolate=flags[fid]))
+            np.testing.assert_array_equal(got[r], want,
+                                          err_msg=pack.names[fid])
+
+
+class TestRoutedQuantWidthGroups:
+    def test_mixed_int8_int16_rows(self):
+        pack = mixed_width_pack()
+        assert set(pack.entry_bits) == {8, 16}
+        ids = [0, 1, 2, 3, 2, 0]
+        x = jnp.asarray(np.stack([domain_probe(pack, f, n=200) for f in ids]))
+        got = np.asarray(routed_quant_pack_lookup_pallas(pack, ids, x))
+        for r, fid in enumerate(ids):
+            want = np.asarray(quant_pack_lookup_pallas(pack, fid, x[r]))
+            np.testing.assert_array_equal(got[r], want,
+                                          err_msg=pack.names[fid])
+
+
+class TestOneExecutable:
+    def test_rerouting_does_not_recompile(self):
+        """The whole point: fn_ids is a runtime operand, so a new routing
+        reuses the cached executable (vs one specialization per member in the
+        static path)."""
+        from repro.kernels.routed_pack_lookup import _routed_call
+        if not hasattr(_routed_call, "_cache_size"):
+            pytest.skip("jit cache introspection unavailable")
+        pack = f32_pack()
+        x = jnp.asarray(RNG.normal(0, 3, (4, 160)).astype(np.float32))
+        routed_pack_lookup_pallas(pack, [0, 1, 2, 3], x)
+        size = _routed_call._cache_size()
+        routed_pack_lookup_pallas(pack, [3, 2, 1, 0], x)
+        routed_pack_lookup_pallas(pack, "tanh", x)
+        assert _routed_call._cache_size() == size
+
+    def test_traced_fn_ids(self):
+        """Router outputs (traced int vectors) route without retracing per
+        assignment, and out-of-range dynamic ids clamp like the kernels."""
+        pack = f32_pack()
+        x = jnp.asarray(RNG.normal(0, 3, (3, 96)).astype(np.float32))
+
+        @jax.jit
+        def serve(ids, v):
+            return routed_pack_lookup_pallas(pack, ids, v)
+
+        ids = jnp.asarray([1, 0, 2], jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(serve(ids, x)),
+            np.asarray(routed_pack_lookup_pallas(pack, [1, 0, 2], x)))
+        big = jnp.asarray([1, 0, 10_000], jnp.int32)  # clamps to last member
+        np.testing.assert_array_equal(
+            np.asarray(serve(big, x))[2],
+            np.asarray(table_pack_lookup_pallas(pack, pack.n_functions - 1,
+                                                x[2])))
+
+
+class TestMemberLookupErrors:
+    """Regression: unknown members fail with a KeyError naming the offender
+    and listing the pack, never an opaque tuple IndexError."""
+
+    @pytest.mark.parametrize("build", [f32_pack, quant_pack])
+    def test_unknown_name_lists_members(self, build):
+        pack = build()
+        with pytest.raises(KeyError, match="nope.*not in pack"):
+            pack.member_id("nope")
+
+    @pytest.mark.parametrize("build", [f32_pack, quant_pack])
+    def test_out_of_range_id_lists_members(self, build):
+        pack = build()
+        for bad in (99, -1):
+            with pytest.raises(KeyError, match="out of range.*members"):
+                pack.member_id(bad)
+
+    def test_eval_and_kernel_paths_raise_keyerror(self):
+        pack, qpack = f32_pack(), quant_pack()
+        x = jnp.ones((8,), jnp.float32)
+        with pytest.raises(KeyError):
+            eval_pack_ref(pack, 99, x)
+        with pytest.raises(KeyError):
+            eval_quant_pack_ref(qpack, 99, x)
+        with pytest.raises(KeyError):
+            table_pack_lookup_pallas(pack, 99, x)
+        with pytest.raises(KeyError):
+            quant_pack_lookup_pallas(qpack, -1, x)
+
+    def test_resolve_fn_ids_validation(self):
+        pack = f32_pack()
+        with pytest.raises(KeyError, match="nope"):
+            resolve_fn_ids(pack, ["gelu", "nope"], 2)
+        with pytest.raises(KeyError, match="out of range"):
+            resolve_fn_ids(pack, [0, 99], 2)
+        with pytest.raises(KeyError, match="out of range"):
+            # concrete (non-traced) arrays are validated like sequences
+            resolve_fn_ids(pack, jnp.asarray([0, 99], jnp.int32), 2)
+        with pytest.raises(ValueError, match="does not match"):
+            resolve_fn_ids(pack, [0, 1, 2], 2)
+        ids = resolve_fn_ids(pack, "tanh", 3)
+        np.testing.assert_array_equal(
+            np.asarray(ids), np.full(3, pack.fn_id("tanh"), np.int32))
+
+    def test_extr_flags_validation(self):
+        pack = f32_pack()
+        with pytest.raises(ValueError, match="one flag per member"):
+            routed_extr_flags(pack, (True, False))
+
+
+class TestRoutingScalars:
+    def test_layout_offsets_agree_with_pack(self):
+        """QuantPackLayout.bounds_offsets/lane_offsets are the design-layer
+        mirror of the runtime's prefetched operands — they must agree."""
+        from repro.core import quant_pack_layout
+
+        layout = quant_pack_layout(
+            [plan_quant_member(n, EA) for n in ("gelu", "tanh", "log")])
+        pack = from_quant_layout(layout)
+        n_arr, bo, lo, bits = pack.routing_scalars()
+        np.testing.assert_array_equal(bo, layout.bounds_offsets)
+        np.testing.assert_array_equal(lo, layout.lane_offsets)
+        np.testing.assert_array_equal(n_arr,
+                                      np.asarray(layout.n_intervals, np.int32))
+        np.testing.assert_array_equal(bits,
+                                      np.asarray(layout.entry_bits, np.int32))
+
+
+class TestTiling:
+    @pytest.mark.parametrize("shape", [(1,), (3,), (2, 5), (4, 257),
+                                       (3, 2, 130), (2, 1024)])
+    def test_shapes_round_trip(self, shape):
+        pack = f32_pack()
+        x = jnp.asarray(RNG.normal(0, 3, shape).astype(np.float32))
+        ids = [r % pack.n_functions for r in range(shape[0])]
+        got = routed_pack_lookup_pallas(pack, ids, x)
+        assert got.shape == x.shape and got.dtype == x.dtype
+        want = jax.jit(lambda v: eval_routed_ref(pack, ids, v))(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_block_cols_sweep(self):
+        pack = f32_pack()
+        x = jnp.asarray(RNG.normal(0, 3, (3, 1000)).astype(np.float32))
+        want = np.asarray(routed_pack_lookup_pallas(pack, [0, 1, 2], x))
+        for bc in (128, 256, 1024):
+            got = routed_pack_lookup_pallas(pack, [0, 1, 2], x, block_cols=bc)
+            np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_zero_dim_input_rejected(self):
+        with pytest.raises(ValueError, match="leading row axis"):
+            tile_routed_rows(jnp.float32(1.0), 128)
+
+
+class TestMakeRoutedFn:
+    def test_values_and_grads_match_static(self):
+        pack = f32_pack()
+        names = ["gelu", "tanh", "silu"]
+        f = make_routed_fn(pack, names)
+        x = jnp.asarray(RNG.normal(0, 3, (3, 120)).astype(np.float32))
+        y = np.asarray(jax.jit(f)(x))
+        g = np.asarray(jax.grad(lambda v: f(v).sum())(x))
+        for r, n in enumerate(names):
+            np.testing.assert_array_equal(
+                y[r], np.asarray(table_pack_lookup_pallas(pack, n, x[r])))
+            _, dys = table_pack_grad_pallas(pack, n, x[r])
+            np.testing.assert_array_equal(g[r], np.asarray(dys))
+
+    def test_ref_variant_matches_kernel(self):
+        for pack in (f32_pack(), quant_pack()):
+            ids = [2, 0, 1]
+            x = jnp.asarray(RNG.normal(0, 3, (3, 64)).astype(np.float32))
+            a = jax.jit(make_routed_fn(pack, ids, use_pallas=True))(x)
+            b = jax.jit(make_routed_fn(pack, ids, use_pallas=False))(x)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_quant_grads_finite(self):
+        f = make_routed_fn(quant_pack(), [0, 5, 9])
+        x = jnp.asarray(RNG.normal(0, 2, (3, 80)).astype(np.float32))
+        g = np.asarray(jax.grad(lambda v: f(v).sum())(x))
+        assert np.isfinite(g).all()
+
+
+class TestApproxConfigRoutedModes:
+    def test_routed_unary_matches_pack_unary(self):
+        cfg_r = ApproxConfig(mode="routed_pack", e_a=EA, omega=0.2)
+        cfg_p = ApproxConfig(mode="table_pack", e_a=EA, omega=0.2)
+        x = jnp.asarray(RNG.normal(0, 4, (300,)).astype(np.float32))
+        for name in ("gelu", "silu", "tanh", "sigmoid", "exp", "softplus"):
+            np.testing.assert_array_equal(
+                np.asarray(jax.jit(cfg_r.unary(name))(x)),
+                np.asarray(jax.jit(cfg_p.unary(name))(x)), err_msg=name)
+            np.testing.assert_array_equal(
+                np.asarray(jax.vmap(jax.grad(cfg_r.unary(name)))(x)),
+                np.asarray(jax.vmap(jax.grad(cfg_p.unary(name)))(x)),
+                err_msg=f"{name} grad")
+
+    def test_routed_quant_unary_matches_quant_unary(self):
+        cfg_r = ApproxConfig(mode="routed_quant_pack", e_a=EA, omega=0.2)
+        cfg_q = ApproxConfig(mode="quant_pack", e_a=EA, omega=0.2)
+        x = jnp.asarray(RNG.normal(0, 4, (200,)).astype(np.float32))
+        for name in ("gelu", "tanh"):
+            np.testing.assert_array_equal(
+                np.asarray(jax.jit(cfg_r.unary(name))(x)),
+                np.asarray(jax.jit(cfg_q.unary(name))(x)), err_msg=name)
+
+    @pytest.mark.parametrize("mode", ["routed_pack", "routed_pack_ref",
+                                      "routed_quant_pack", "table_pack",
+                                      "exact"])
+    def test_routed_fn_matches_per_slot_unary(self, mode):
+        """The MoE demo contract: one routed call == per-slot static unaries,
+        including the odd-extended tanh rows."""
+        cfg = ApproxConfig(mode=mode, e_a=EA, omega=0.2)
+        slots = ("gelu", "silu", "tanh", "sigmoid", "softplus", "exp")
+        f = cfg.routed_fn(slots)
+        x = jnp.asarray(RNG.normal(0, 3, (len(slots), 64)).astype(np.float32))
+        y = np.asarray(jax.jit(f)(x))
+        for i, n in enumerate(slots):
+            np.testing.assert_array_equal(
+                y[i], np.asarray(jax.jit(cfg.unary(n))(x[i])),
+                err_msg=f"{mode}:{n}")
+        g = np.asarray(jax.grad(lambda v: f(v).sum())(x))
+        assert np.isfinite(g).all(), mode
+
+    def test_routed_fn_unknown_member_raises(self):
+        cfg = ApproxConfig(mode="routed_pack", e_a=EA,
+                           pack_functions=("gelu",))
+        with pytest.raises(KeyError, match="pack_functions"):
+            cfg.routed_fn(("gelu", "tanh"))
+
+    def test_routed_demo_helper(self):
+        from repro.models.common import routed_activation
+        cfg = ApproxConfig(mode="routed_pack", e_a=EA, omega=0.2)
+        f = routed_activation(cfg, ["gelu", "tanh"])
+        x = jnp.asarray(RNG.normal(0, 2, (2, 32)).astype(np.float32))
+        y = np.asarray(f(x))
+        assert y.shape == (2, 32) and np.isfinite(y).all()
