@@ -27,6 +27,9 @@ BENCH_QUANTPACK_JSON = os.path.join(
 BENCH_ROUTEDPACK_JSON = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_routedpack.json")
+BENCH_SERVE_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serve.json")
 
 
 def _time(f, *args, reps=20) -> float:
@@ -295,9 +298,136 @@ def routed_dispatch_bench(size: int = 1 << 20, e_a: float = 1e-4,
     return rows
 
 
+def serve_bench(modes=("exact", "table_pack"), n_requests: int = 8,
+                batch: int = 2, long_budget: int = 24, short_budget: int = 2,
+                out_path: str = BENCH_SERVE_JSON) -> List[tuple]:
+    """Continuous vs static serving -> BENCH_serve.json.
+
+    A staggered queue (equal-length prompts, alternating long/short budgets)
+    through a tiny dense model, served both ways per table mode.  The static
+    scheduler pads each fixed group to its longest budget, so every short
+    request strands decode slots; the continuous scheduler refills freed
+    slots from the admission queue mid-stream.  Reports tokens/sec over the
+    per-request trimmed counts and the wasted-slot-step fraction for each —
+    CI smoke-fails if continuous wastes more than static or loses on
+    tokens/sec (the refill machinery must pay for itself even on CPU, where
+    the refill prefill is NOT overlapped with decode like a TPU host would).
+
+    Equal prompt lengths keep both schedulers at ONE compiled prefill shape
+    (static pads per group; a mixed-length queue would recompile its prefill
+    per distinct group width) and make their greedy outputs comparable
+    token-for-token.  Timings exclude compiles: each engine is warmed on a
+    queue long enough to trigger a refill (the refill gather/scatter ops are
+    eager and XLA caches them per shape — the first single-slot refill pays
+    their compiles), then counters reset before the timed run.
+    """
+    from repro.approx import ApproxConfig
+    from repro.models import build_model, get_config
+    from repro.serving.engine import (ContinuousEngine, DecodeEngine, Request,
+                                      serve_static)
+
+    rng = np.random.default_rng(5)
+    prompt_len, cache_len, vocab = 8, 64, 128
+    report = {"requests": n_requests, "batch": batch,
+              "prompt_len": prompt_len,
+              "budgets": [long_budget, short_budget], "modes": {}}
+    rows = []
+    for mode in modes:
+        cfg = get_config("stablelm-3b").replace(
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+            d_ff=128, vocab=vocab, remat=False,
+            approx=ApproxConfig(mode=mode, e_a=1e-4, omega=0.2))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        mk = lambda n: [Request(
+            prompt=rng.integers(0, vocab, (prompt_len,)).astype(np.int32),
+            max_new_tokens=long_budget if i % 2 == 0 else short_budget)
+            for i in range(n)]
+        warm = mk(2 * batch)  # enough requests to exercise mid-stream refill
+        reqs = mk(n_requests)
+
+        stat = DecodeEngine(model, params, batch, cache_len)
+        serve_static(model, params, warm, batch, cache_len, engine=stat)
+        cont = ContinuousEngine(model, params, batch, cache_len,
+                                prefill_len=prompt_len)
+        cont.serve(warm)
+        stat.reset_counters()
+        cont.reset_counters()
+
+        # Interleaved best-of-N wall times: shared-runner noise must not flip
+        # the gate (same rationale as _time_min), and alternating the two
+        # schedulers inside each rep keeps a noisy phase from taxing only one.
+        reps = 5
+        t_s = t_c = float("inf")
+        res_s = res_c = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            res_s = serve_static(model, params, reqs, batch, cache_len,
+                                 engine=stat)
+            t_s = min(t_s, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            res_c = cont.serve(reqs)
+            t_c = min(t_c, time.perf_counter() - t0)
+        for eng in (stat, cont):
+            eng.batch_steps //= reps
+            eng.wasted_slot_steps //= reps
+        cont.refills //= reps
+
+        useful_s = sum(r.steps for r in res_s)
+        useful_c = sum(r.steps for r in res_c)
+        m = {
+            "static": {"tokens_per_s": round(useful_s / t_s, 1),
+                       "tokens": useful_s, "batch_rounds": stat.batch_steps,
+                       "wasted_step_fraction": round(stat.wasted_fraction, 3)},
+            "continuous": {"tokens_per_s": round(useful_c / t_c, 1),
+                           "tokens": useful_c, "batch_rounds": cont.batch_steps,
+                           "refills": cont.refills,
+                           "wasted_step_fraction": round(cont.wasted_fraction,
+                                                         3)},
+            "speedup_continuous_vs_static": round(t_s / t_c, 2),
+        }
+        report["modes"][mode] = m
+        rows.append((f"serve.{mode}.continuous_tok_s",
+                     m["continuous"]["tokens_per_s"],
+                     f"static={m['static']['tokens_per_s']} "
+                     f"({m['speedup_continuous_vs_static']}x)"))
+        rows.append((f"serve.{mode}.wasted_fraction",
+                     m["continuous"]["wasted_step_fraction"],
+                     f"static={m['static']['wasted_step_fraction']}"))
+        print(f"[serve] {mode:10s} continuous="
+              f"{m['continuous']['tokens_per_s']:8.1f} tok/s "
+              f"(waste {m['continuous']['wasted_step_fraction']:.3f}) "
+              f"static={m['static']['tokens_per_s']:8.1f} tok/s "
+              f"(waste {m['static']['wasted_step_fraction']:.3f})  "
+              f"{m['speedup_continuous_vs_static']}x")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"[serve] report -> {out_path}")
+    return rows
+
+
+def serve_bench_gate(report_path: str = BENCH_SERVE_JSON) -> None:
+    """CI smoke gate over BENCH_serve.json: per mode, continuous must not
+    waste more slot-steps than static, and must win tokens/sec."""
+    with open(report_path) as f:
+        report = json.load(f)
+    for mode, m in report["modes"].items():
+        wc = m["continuous"]["wasted_step_fraction"]
+        ws = m["static"]["wasted_step_fraction"]
+        if wc > ws:
+            raise SystemExit(f"serve[{mode}]: continuous wasted fraction "
+                             f"{wc} > static {ws}")
+        tc = m["continuous"]["tokens_per_s"]
+        ts = m["static"]["tokens_per_s"]
+        if tc < ts:
+            raise SystemExit(f"serve[{mode}]: continuous {tc} tok/s < "
+                             f"static {ts} tok/s")
+
+
 def main() -> None:
     """CLI for the CI smoke steps: ``python -m benchmarks.kernel_bench
-    --quantpack`` / ``--routedpack``."""
+    --quantpack`` / ``--routedpack`` / ``--serve``."""
     import argparse
 
     ap = argparse.ArgumentParser()
@@ -306,6 +436,9 @@ def main() -> None:
     ap.add_argument("--routedpack", action="store_true",
                     help="emit BENCH_routedpack.json (routed vs static "
                          "dispatch latency)")
+    ap.add_argument("--serve", action="store_true",
+                    help="emit BENCH_serve.json (continuous vs static "
+                         "serving throughput + wasted-step fraction)")
     ap.add_argument("--size", type=int, default=None,
                     help="probe tensor size (default 2^18; 2^20 for "
                          "--routedpack so static and routed tile to the same "
@@ -330,6 +463,9 @@ def main() -> None:
             raise SystemExit(
                 f"routed dispatch {ratio[0]}us > 1.5x static {static[0]}us "
                 f"on CPU interpret mode")
+    elif args.serve:
+        serve_bench(out_path=args.out or BENCH_SERVE_JSON)
+        serve_bench_gate(args.out or BENCH_SERVE_JSON)
     else:
         activation_bench(args.size or (1 << 18))
         interval_count_flatness()

@@ -1,7 +1,14 @@
-"""Batched serving example: prefill + greedy decode over a request queue with
-the KV cache on device, table-backend activations, and a throughput report.
+"""Batched serving example: prefill + decode over a request queue with the KV
+cache on device, table-backend activations, and a throughput report.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --requests 6 --max-new 12
+
+``--scheduler continuous`` (the default) serves the queue through the
+ContinuousEngine: freed slots are refilled mid-stream from the admission
+queue, so decode batches stay full; ``--scheduler static`` is the PR 1
+fixed-group baseline.  Throughput counts only the tokens each request
+actually kept (per-request EOS/budget trimming), and the wasted-slot-step
+fraction shows what the scheduler left on the table.
 
 ``--routed-demo`` instead demonstrates RoutedPack: a different activation per
 expert slot evaluated in ONE call (dynamic fn_id dispatch — the routing is a
@@ -18,7 +25,8 @@ import numpy as np
 from repro.approx import TABLE_MODES, ApproxConfig
 from repro.models import build_model, get_config
 from repro.models.common import routed_activation
-from repro.serving.engine import Request, serve
+from repro.serving.engine import (ContinuousEngine, DecodeEngine, Request,
+                                  serve_static)
 
 MODES = ["exact", *TABLE_MODES]
 
@@ -49,6 +57,12 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--mode", default="table_ref", choices=MODES)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "static"],
+                    help="continuous = admission queue + mid-stream slot "
+                         "refill (full decode batches); static = PR 1 "
+                         "fixed-group baseline")
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--routed-demo", action="store_true",
                     help="run the per-slot routed-activation demo and exit")
     args = ap.parse_args()
@@ -66,16 +80,34 @@ def main():
     params = model.init(jax.random.key(0))
 
     rng = np.random.default_rng(0)
+    # staggered budgets: short and long requests mixed, so the static
+    # scheduler visibly wastes decode steps that the continuous one refills
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, (int(n),)).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for n in rng.integers(5, 24, args.requests)]
+                    max_new_tokens=args.max_new if i % 2 == 0
+                    else max(1, args.max_new // 4))
+            for i, n in enumerate(rng.integers(5, 24, args.requests))]
 
-    t0 = time.time()
-    results = serve(model, params, reqs, batch_size=args.batch, cache_len=128)
-    dt = time.time() - t0
-    total = sum(len(r.tokens) for r in results)
-    print(f"mode={args.mode}: served {len(results)} requests / {total} tokens "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s, CPU)")
+    if args.scheduler == "continuous":
+        engine = ContinuousEngine(model, params, args.batch, cache_len=128,
+                                  temperature=args.temperature)
+        t0 = time.time()
+        results = engine.serve(reqs)
+        dt = time.time() - t0
+    else:
+        engine = DecodeEngine(model, params, args.batch, cache_len=128,
+                              temperature=args.temperature)
+        t0 = time.time()
+        results = serve_static(model, params, reqs, batch_size=args.batch,
+                               cache_len=128, engine=engine)
+        dt = time.time() - t0
+    # throughput over tokens each request actually generated (Result.steps ==
+    # len(tokens), trimmed at that request's own EOS/budget — padded or
+    # post-EOS slots don't inflate the number)
+    total = sum(r.steps for r in results)
+    print(f"mode={args.mode}/{args.scheduler}: served {len(results)} requests "
+          f"/ {total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s, CPU); "
+          f"{engine.batch_steps} batch rounds, "
+          f"wasted slot-step fraction {engine.wasted_fraction:.2f}")
     for i, r in enumerate(results[:3]):
         print(f"  req{i}: prompt={r.prompt_len} toks -> {r.tokens.tolist()}")
     print("serve_decode OK")

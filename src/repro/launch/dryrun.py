@@ -271,6 +271,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         mem_fields = {"error": repr(e)}
     try:
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+            cost = cost[0] if cost else {}
     except Exception:
         cost = {}
     hlo = compiled.as_text()

@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduced \\
       --requests 8 --max-new 16
+
+``--scheduler continuous`` (default) serves through the ContinuousEngine
+(admission queue, per-slot budgets/EOS/RNG, mid-stream slot refill);
+``--scheduler static`` keeps the fixed-group baseline.
 """
 
 from __future__ import annotations
@@ -14,7 +18,8 @@ import numpy as np
 
 from repro.approx import TABLE_MODES
 from repro.models import build_model, get_config
-from repro.serving.engine import Request, serve
+from repro.serving.engine import (ContinuousEngine, DecodeEngine, Request,
+                                  serve_static)
 
 
 def main():
@@ -25,6 +30,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "static"],
+                    help="continuous = admission queue + mid-stream slot "
+                         "refill; static = fixed request groups")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--approx-mode",
                     choices=["exact", *TABLE_MODES],
@@ -65,15 +74,26 @@ def main():
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, (int(n),)).astype(np.int32),
                     max_new_tokens=args.max_new)
             for n in rng.integers(4, 32, args.requests)]
-    t0 = time.time()
-    results = serve(model, params, reqs, batch_size=args.batch,
-                    cache_len=args.cache_len, temperature=args.temperature)
+    if args.scheduler == "continuous":
+        engine = ContinuousEngine(model, params, args.batch, args.cache_len,
+                                  temperature=args.temperature)
+        t0 = time.time()
+        results = engine.serve(reqs)
+    else:
+        engine = DecodeEngine(model, params, args.batch, args.cache_len,
+                              temperature=args.temperature)
+        t0 = time.time()
+        results = serve_static(model, params, reqs, batch_size=args.batch,
+                               cache_len=args.cache_len, engine=engine)
     dt = time.time() - t0
-    total_new = sum(len(r.tokens) for r in results)
+    total_new = sum(r.steps for r in results)  # per-request trimmed counts
     print(f"served {len(results)} requests, {total_new} tokens "
-          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
+          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s, {args.scheduler}); "
+          f"{engine.batch_steps} batch rounds, wasted slot-step fraction "
+          f"{engine.wasted_fraction:.2f}")
     for i, r in enumerate(results[:4]):
-        print(f"  req{i}: prompt_len={r.prompt_len} -> {r.tokens[:8].tolist()}...")
+        print(f"  req{i}: prompt_len={r.prompt_len} steps={r.steps} "
+              f"-> {r.tokens[:8].tolist()}...")
 
 
 if __name__ == "__main__":

@@ -87,8 +87,11 @@ def project_qkv(p: Params, x: jax.Array, positions: Optional[jax.Array], *,
         q = _headnorm(p["qn"]["g"], q)
         k = _headnorm(p["kn"]["g"], k)
     if positions is not None and rope_theta > 0:
-        q = apply_rope(q, positions[None, :], rope_theta)
-        k = apply_rope(k, positions[None, :], rope_theta)
+        # positions: (S,) shared across the batch, or (B, S) per-slot clocks
+        # (continuous batching: each slot decodes at its own absolute position)
+        pos_b = positions if positions.ndim == 2 else positions[None, :]
+        q = apply_rope(q, pos_b, rope_theta)
+        k = apply_rope(k, pos_b, rope_theta)
     # normalize kv to g_eff groups on the ACTIVATION (params stay logical)
     if geom.repeat > 1:
         k = jnp.repeat(k, geom.repeat, axis=2)
@@ -105,7 +108,9 @@ def _flash_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
                  kv_chunk: int, scale: float):
     """Running-softmax attention for one q block over all kv chunks.
 
-    q: (B, Sq, G, Qg, D); k/v: (B, T, G, D); positions: (Sq,), (T,).
+    q: (B, Sq, G, Qg, D); k/v: (B, T, G, D); positions: (Sq,) / (T,) shared
+    across the batch, or (B, Sq) / (B, T) per-slot (continuous batching lets
+    every batch slot run its own absolute clock and cache validity).
     Returns (B, Sq, G, Qg, D).
     """
     B, Sq, G, Qg, D = q.shape
@@ -117,10 +122,17 @@ def _flash_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
         pad = Tp - T
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+        if k_pos.ndim == 1:
+            k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+        else:
+            k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
     k = jnp.moveaxis(k.reshape(B, n_chunks, kv_chunk, G, D), 1, 0)
     v = jnp.moveaxis(v.reshape(B, n_chunks, kv_chunk, G, D), 1, 0)
-    k_pos = k_pos.reshape(n_chunks, kv_chunk)
+    if k_pos.ndim == 1:
+        k_pos = k_pos.reshape(n_chunks, kv_chunk)
+    else:
+        k_pos = jnp.moveaxis(k_pos.reshape(B, n_chunks, kv_chunk), 1, 0)
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None, :]  # (1|B, Sq)
 
     qf = (q * scale).astype(jnp.float32)
 
@@ -128,12 +140,13 @@ def _flash_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
         m, l, acc = carry
         kc, vc, kp = xs
         s = jnp.einsum("bsgqd,btgd->bsgqt", qf, kc.astype(jnp.float32))
-        valid = kp[None, :] >= 0  # empty slots masked
+        kpb = kp if kp.ndim == 2 else kp[None, :]  # (1|B, Tc)
+        valid = kpb[:, None, :] >= 0  # empty slots masked
         if causal:
-            valid = valid & (kp[None, :] <= q_pos[:, None])
+            valid = valid & (kpb[:, None, :] <= qp[:, :, None])
         if window > 0:
-            valid = valid & (kp[None, :] > q_pos[:, None] - window)
-        s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+            valid = valid & (kpb[:, None, :] > qp[:, :, None] - window)
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
@@ -154,18 +167,26 @@ def _flash_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
 
 def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True, window: int = 0,
                     q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
-    """q: (B, S, G, Qg, D); k/v: (B, T, G, D). Positions are absolute token indices;
-    negative k_pos marks empty cache slots."""
+    """q: (B, S, G, Qg, D); k/v: (B, T, G, D). Positions are absolute token
+    indices; negative k_pos marks empty cache slots.  Either positions operand
+    may carry a leading batch axis ((B, S) / (B, T)) for per-slot clocks."""
     B, S, G, Qg, D = q.shape
     scale = D ** -0.5
     q_chunk = min(q_chunk, S)
     pad = q_chunk * (-(-S // q_chunk)) - S
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
-        q_pos = jnp.pad(q_pos, (0, pad), constant_values=2_000_000_000)
+        if q_pos.ndim == 1:
+            q_pos = jnp.pad(q_pos, (0, pad), constant_values=2_000_000_000)
+        else:
+            q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)),
+                            constant_values=2_000_000_000)
     n_q = q.shape[1] // q_chunk
     qs = q.reshape(B, n_q, q_chunk, G, Qg, D)
-    qp = q_pos.reshape(n_q, q_chunk)
+    if q_pos.ndim == 1:
+        qp = q_pos.reshape(n_q, q_chunk)
+    else:
+        qp = jnp.moveaxis(q_pos.reshape(B, n_q, q_chunk), 1, 0)
 
     inner = functools.partial(
         _flash_inner, k=k, v=v, k_pos=k_pos, causal=causal, window=window,
@@ -194,13 +215,18 @@ def attention_out(p: Params, attended: jax.Array, geom=None) -> jax.Array:
 def cache_insert(k_buf, v_buf, pos_buf, k_new, v_new, positions):
     """Insert S new rope'd entries into a ring/linear buffer.
 
-    k_buf/v_buf: (B, W, G, D); pos_buf: (W,) int32 (-1 = empty slot).
-    positions: (S,) absolute; slot = position % W.  Callers must pass S <= W
-    (prefill truncates to the last W tokens first).
+    k_buf/v_buf: (B, W, G, D); pos_buf: (B, W) int32 per-slot validity rows
+    (-1 = empty slot).  positions: (S,) absolute shared across the batch
+    (broadcast to every row), or (B, S) per-slot; slot = position % W.
+    Callers must pass S <= W (prefill truncates to the last W tokens first).
     """
     W = k_buf.shape[1]
-    slots = (positions % W).astype(jnp.int32)
-    k_buf = k_buf.at[:, slots].set(k_new.astype(k_buf.dtype))
-    v_buf = v_buf.at[:, slots].set(v_new.astype(v_buf.dtype))
-    pos_buf = pos_buf.at[slots].set(positions.astype(jnp.int32))
+    B = k_buf.shape[0]
+    pos2 = jnp.broadcast_to(jnp.atleast_2d(positions),
+                            (B, positions.shape[-1]))
+    slots = (pos2 % W).astype(jnp.int32)
+    b = jnp.arange(B)[:, None]
+    k_buf = k_buf.at[b, slots].set(k_new.astype(k_buf.dtype))
+    v_buf = v_buf.at[b, slots].set(v_new.astype(v_buf.dtype))
+    pos_buf = pos_buf.at[b, slots].set(pos2.astype(jnp.int32))
     return k_buf, v_buf, pos_buf

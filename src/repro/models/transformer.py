@@ -71,6 +71,21 @@ def _stack_init(init_fn, key, n: int):
     return jax.vmap(init_fn)(jax.random.split(key, n))
 
 
+def _decode_positions(pos, pos_buf, W: int):
+    """Normalize a decode position operand against a per-slot (B, W) buffer.
+
+    ``pos`` is either a () scalar (shared clock: every slot writes the same
+    ring index) or a (B,) vector (continuous batching: each slot runs its own
+    absolute clock).  Returns ``(positions, pos_buf)`` where positions is
+    (1,) or (B, 1) — both broadcast through RoPE/flash — and pos_buf has this
+    step's entries marked valid."""
+    pos32 = pos.astype(jnp.int32)
+    if pos.ndim == 0:
+        return pos32[None], pos_buf.at[:, pos32 % W].set(pos32)
+    b = jnp.arange(pos.shape[0])
+    return pos32[:, None], pos_buf.at[b, pos32 % W].set(pos32)
+
+
 def _slice_layer(stacked, i):
     return jax.tree.map(lambda t: t[i], stacked)
 
@@ -254,6 +269,9 @@ class DecoderLM(BaseLM):
     # ------------------------------- cache ------------------------------------------
 
     def init_cache(self, batch: int, cache_len: int) -> Cache:
+        # Position buffers are per-slot (B, W): every batch slot carries its
+        # own validity/clock row, so a freed slot can be refilled mid-stream
+        # (ContinuousEngine) without corrupting its neighbours' masks.
         cfg = self.cfg
         G, D = cfg.attn_geom.g_eff, cfg.head_dim
         mk = lambda *s: jnp.zeros(s, jnp.bfloat16)
@@ -261,15 +279,15 @@ class DecoderLM(BaseLM):
             W = cache_len if cfg.attn.window == 0 else min(cfg.attn.window, cache_len)
             return {"k": mk(cfg.n_layers, batch, W, G, D),
                     "v": mk(cfg.n_layers, batch, W, G, D),
-                    "pos": jnp.full((W,), -1, jnp.int32)}
+                    "pos": jnp.full((batch, W), -1, jnp.int32)}
         Wl = min(LOCAL_WINDOW, cache_len)
         return {
             "loc_k": mk(self.n_groups, self.period - 1, batch, Wl, G, D),
             "loc_v": mk(self.n_groups, self.period - 1, batch, Wl, G, D),
-            "loc_pos": jnp.full((Wl,), -1, jnp.int32),
+            "loc_pos": jnp.full((batch, Wl), -1, jnp.int32),
             "glob_k": mk(self.n_groups, batch, cache_len, G, D),
             "glob_v": mk(self.n_groups, batch, cache_len, G, D),
-            "glob_pos": jnp.full((cache_len,), -1, jnp.int32),
+            "glob_pos": jnp.full((batch, cache_len), -1, jnp.int32),
         }
 
     @staticmethod
@@ -355,7 +373,7 @@ class DecoderLM(BaseLM):
         cfg = self.cfg
         x = shard(embed(params["embed"], tok_c, self.dtype), "batch", None, None)
         W = cache["k"].shape[2]
-        pb = cache["pos"].at[positions % W].set(positions.astype(jnp.int32))
+        pb = cache["pos"].at[:, positions % W].set(positions.astype(jnp.int32))
 
         def body(x, xs):
             lp, kb, vb = xs
@@ -369,14 +387,14 @@ class DecoderLM(BaseLM):
         return logits, {"k": ks, "v": vs, "pos": pb}
 
     def decode_step(self, params, tok, pos, cache):
-        """tok: (B, 1) int32; pos: () int32 absolute position."""
+        """tok: (B, 1) int32; pos: () int32 shared absolute position, or (B,)
+        int32 per-slot positions (continuous batching)."""
         cfg = self.cfg
         x = shard(embed(params["embed"], tok, self.dtype), "batch", None, None)
-        positions = pos[None].astype(jnp.int32)
 
         if self.period == 1:
             W = cache["k"].shape[2]
-            pb = cache["pos"].at[pos % W].set(pos.astype(jnp.int32))
+            positions, pb = _decode_positions(pos, cache["pos"], W)
 
             def body(x, xs):
                 lp, kb, vb = xs
@@ -390,8 +408,8 @@ class DecoderLM(BaseLM):
         else:
             Wl = cache["loc_k"].shape[3]
             Wg = cache["glob_k"].shape[2]
-            lpb = cache["loc_pos"].at[pos % Wl].set(pos.astype(jnp.int32))
-            gpb = cache["glob_pos"].at[pos % Wg].set(pos.astype(jnp.int32))
+            positions, lpb = _decode_positions(pos, cache["loc_pos"], Wl)
+            _, gpb = _decode_positions(pos, cache["glob_pos"], Wg)
 
             def gbody(x, xs):
                 (loc, glob), lkb, lvb, gkb, gvb = xs
@@ -581,7 +599,7 @@ class HybridLM(BaseLM):
                                  cfg.head_dim), jnp.bfloat16),
             "attn_v": jnp.zeros((self.n_groups, batch, W, cfg.attn_geom.g_eff,
                                  cfg.head_dim), jnp.bfloat16),
-            "attn_pos": jnp.full((W,), -1, jnp.int32),
+            "attn_pos": jnp.full((batch, W), -1, jnp.int32),
         }
         if self.trailing:
             c["mamba_tail"] = jax.tree.map(
@@ -598,15 +616,16 @@ class HybridLM(BaseLM):
         x, cache = self._forward(params, x, positions, cache, "prefill")
         W = cache["attn_k"].shape[2]
         pn = positions[-W:] if tokens.shape[1] >= W else positions
-        cache["attn_pos"] = cache["attn_pos"].at[pn % W].set(pn.astype(jnp.int32))
+        cache["attn_pos"] = cache["attn_pos"].at[:, pn % W].set(
+            pn.astype(jnp.int32))
         return self._logits(params, x[:, -1:])[:, 0], cache
 
     def decode_step(self, params, tok, pos, cache):
         x = shard(embed(params["embed"], tok, self.dtype), "batch", None, None)
-        positions = pos[None].astype(jnp.int32)
         cache = dict(cache)
         W = cache["attn_k"].shape[2]
-        cache["attn_pos"] = cache["attn_pos"].at[pos % W].set(pos.astype(jnp.int32))
+        positions, pb = _decode_positions(pos, cache["attn_pos"], W)
+        cache["attn_pos"] = pb
         x, cache = self._forward(params, x, positions, cache, "decode")
         return self._logits(params, x)[:, 0], cache
 
@@ -808,7 +827,7 @@ class EncDecLM(BaseLM):
         return {
             "k": jnp.zeros((cfg.n_layers, batch, cache_len, G, D), jnp.bfloat16),
             "v": jnp.zeros((cfg.n_layers, batch, cache_len, G, D), jnp.bfloat16),
-            "pos": jnp.full((cache_len,), -1, jnp.int32),
+            "pos": jnp.full((batch, cache_len), -1, jnp.int32),
             "memory": jnp.zeros((batch, cfg.enc_len, cfg.d_model), jnp.bfloat16),
         }
 
@@ -835,11 +854,10 @@ class EncDecLM(BaseLM):
 
     def decode_step(self, params, tok, pos, cache):
         x = shard(embed(params["embed"], tok, self.dtype), "batch", None, None)
-        positions = pos[None].astype(jnp.int32)
         memory = cache["memory"].astype(self.dtype)
         mem_pos = jnp.arange(memory.shape[1])
         W = cache["k"].shape[2]
-        pb = cache["pos"].at[pos % W].set(pos.astype(jnp.int32))
+        positions, pb = _decode_positions(pos, cache["pos"], W)
 
         def body(x, xs):
             lp, kb, vb = xs

@@ -20,7 +20,8 @@ _RULES = (
     (r"(^|/)(k|v|loc_k|loc_v|glob_k|glob_v|attn_k|attn_v)$",
      ("batch", None, "heads", None)),
     (r"(^|/)memory$", ("batch", None, None)),
-    (r"pos$", ()),  # replicated slot-position vectors
+    # per-slot position/validity buffers: (B, W) int32, batch-sharded with k/v
+    (r"pos$", ("batch", None)),
     # mamba2 state: (..., B, H, P, N); conv carries: (..., B, K-1, C)
     (r"(^|/)state$", ("batch", "ff", None, None)),
     (r"(^|/)conv_x$", ("batch", None, "ff")),

@@ -1,1 +1,14 @@
-"""repro.serving subpackage."""
+"""repro.serving subpackage: static and continuous-batching decode drivers."""
+
+from .engine import (  # noqa: F401
+    ContinuousEngine,
+    DecodeEngine,
+    Request,
+    Result,
+    cache_batch_axes,
+    pad_and_batch,
+    scatter_cache_slots,
+    serve,
+    serve_continuous,
+    serve_static,
+)

@@ -1,17 +1,35 @@
-"""Batched serving driver: fixed-batch prefill + greedy/temperature decode over a
+"""Serving drivers: fixed-batch (static) and continuous-batching decode over a
 request queue, with the KV cache living on-device across steps.
 
-The continuous-batching extension point is ``DecodeEngine.step`` — requests that
-finish (EOS/max_tokens) free their batch slot; ``serve`` refills slots between
-steps.  On TPU the same jitted decode_step serves every step; slot refill is a
-host-side gather/scatter into the cache (cheap relative to a decode step at the
-assigned shapes).
+Two schedulers share the model's prefill/decode executables:
+
+``serve_static`` — PR 1's fixed-group path, kept as the regression baseline:
+requests are grouped into fixed-size batches, each group prefills together and
+decodes until every slot has hit its own EOS or budget (per-slot ``done``
+tracking stops a group early; finished and padding slots no longer drag the
+loop to the group-wide max).
+
+``ContinuousEngine`` / ``serve_continuous`` — an admission queue with
+mid-stream slot refill: every batch slot carries its own request state
+(budget, EOS id, RNG stream, absolute position clock).  When a slot finishes,
+the host prefills the next queued request (one fixed-shape prefill whose rows
+serve every slot freed that round) and scatters the freed slots' rows of the
+fresh cache into the live cache — the same two jitted executables
+(``prefill``, ``decode_step``) serve the whole queue, with zero recompiles
+across refills (per-slot positions keep every decode tick at one shape).
+
+Result accounting is per-request: ``Result.tokens`` is truncated at the
+request's own first EOS (inclusive) and ``Result.steps`` counts the tokens
+actually generated for that request; the batch-wide round count lives on the
+engine (``engine.batch_steps``) together with the wasted-slot-step counters
+the serve benchmark gates on.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, List, Optional
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,12 +45,68 @@ class Request:
 
 @dataclass
 class Result:
-    tokens: np.ndarray
+    tokens: np.ndarray  # truncated at this request's first EOS (inclusive)
     prompt_len: int
-    steps: int
+    steps: int  # tokens generated for THIS request (== len(tokens))
 
 
-class DecodeEngine:
+def _trim_at_eos(tokens: np.ndarray, budget: int, eos_id: int) -> np.ndarray:
+    """This request's tokens: at most ``budget``, cut at the first EOS
+    (keeping the EOS token itself)."""
+    tokens = tokens[:budget]
+    if eos_id >= 0:
+        hits = np.flatnonzero(tokens == eos_id)
+        if hits.size:
+            tokens = tokens[: hits[0] + 1]
+    return tokens
+
+
+def _jit_cache_size(fn) -> int:
+    """Number of compiled specializations behind a jax.jit wrapper (-1 if the
+    runtime doesn't expose it)."""
+    try:
+        return fn._cache_size()
+    except Exception:
+        return -1
+
+
+class _EngineBase:
+    """Shared engine plumbing: compiled-executable bookkeeping and the
+    batch-round / wasted-slot-step counters both schedulers report.
+
+    A slot-round is one slot position in one sampling round (prefill round or
+    decode step); it counts as wasted when it yields no token for a live
+    request.  Caveat the serve bench documents: the static prefill round
+    counts every slot as useful (a padding dummy's first token is kept by its
+    1-token budget even though the caller never sees it), while a continuous
+    refill round charges every non-admitted row — both distortions make the
+    static number look BETTER, so the continuous-vs-static gate is
+    conservative."""
+
+    def reset_counters(self) -> None:
+        self.batch_steps = 0  # sampling rounds (prefill rounds + decode steps)
+        self.wasted_slot_steps = 0
+
+    @property
+    def wasted_fraction(self) -> float:
+        total = self.B * self.batch_steps
+        return self.wasted_slot_steps / total if total else 0.0
+
+    def compile_counts(self) -> dict:
+        return {name: _jit_cache_size(fn)
+                for name, fn in self._executables.items()}
+
+
+def _check_engine_batch(engine, batch_size: int) -> None:
+    if engine.B != batch_size:
+        raise ValueError(f"engine batch size {engine.B} != requested "
+                         f"{batch_size} (a passed engine overrides cache_len/"
+                         "temperature/seed; batch_size must agree)")
+
+
+class DecodeEngine(_EngineBase):
+    """Fixed-batch prefill + decode (the static scheduler's inner engine)."""
+
     def __init__(self, model, params, batch_size: int, cache_len: int,
                  temperature: float = 0.0, seed: int = 0):
         self.model = model
@@ -43,6 +117,9 @@ class DecodeEngine:
         self.key = jax.random.key(seed)
         self._prefill = jax.jit(model.prefill)
         self._step = jax.jit(model.decode_step)
+        self._executables = {"prefill": self._prefill,
+                             "decode_step": self._step}
+        self.reset_counters()
 
     def _sample(self, logits: jax.Array) -> jax.Array:
         if self.temperature <= 0.0:
@@ -50,41 +127,50 @@ class DecodeEngine:
         self.key, sub = jax.random.split(self.key)
         return jax.random.categorical(sub, logits / self.temperature, axis=-1)
 
-    def generate_batch(self, prompts: np.ndarray, max_new: int,
+    def generate_batch(self, prompts: np.ndarray, max_new,
                        eos_id=-1, extra_inputs: Optional[dict] = None):
         """prompts: (B, S) int32, right-aligned equal length (caller pads).
 
-        ``eos_id`` is a scalar applied to the whole batch or a (B,) vector of
-        per-slot EOS ids (-1: that slot never stops early).  Returns
-        ``(tokens, steps)`` where ``steps`` counts every sampled token,
-        including the one sampled from the prefill logits.
+        ``max_new`` and ``eos_id`` are scalars applied to the whole batch or
+        (B,) vectors of per-slot budgets / EOS ids (-1: that slot never stops
+        early).  Returns ``(tokens, steps)`` where ``steps`` is the
+        batch-wide sampling-round count (every round samples one token per
+        slot, including the round fed by the prefill logits); the loop stops
+        as soon as EVERY slot has hit its own EOS or its own budget, so
+        finished and padding slots never drag the group to the max budget.
         """
         B, S = prompts.shape
         assert B == self.B
         eos = np.broadcast_to(np.asarray(eos_id, np.int64), (B,))
+        budget = np.broadcast_to(np.asarray(max_new, np.int64), (B,))
+        horizon = int(budget.max())
         cache = self.model.init_cache(B, self.cache_len)
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if extra_inputs:
             batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
         logits, cache = self._prefill(self.params, batch, cache)
         out = [self._sample(logits)]
+        self.batch_steps += 1
         # only force a device->host sync per step when some slot can stop early
         has_eos = bool((eos >= 0).any())
-        done = np.zeros((B,), bool)
+        done = budget <= 1
         if has_eos:
-            done = (eos >= 0) & (np.asarray(out[0]) == eos)
+            done = done | ((eos >= 0) & (np.asarray(out[0]) == eos))
         steps = 1  # the prefill logits already yielded one token
-        for i in range(max_new - 1):
-            if has_eos and done.all():
+        for i in range(horizon - 1):
+            if done.all():
                 break
+            self.wasted_slot_steps += int(done.sum())
             tok = out[-1][:, None].astype(jnp.int32)
             logits, cache = self._step(self.params, tok,
                                        jnp.asarray(S + i, jnp.int32), cache)
             nxt = self._sample(logits)
             out.append(nxt)
             steps += 1
+            self.batch_steps += 1
+            done = done | (budget <= steps)
             if has_eos:
-                done |= (eos >= 0) & (np.asarray(nxt) == eos)
+                done = done | ((eos >= 0) & (np.asarray(nxt) == eos))
         return np.stack([np.asarray(t) for t in out], axis=1), steps
 
 
@@ -104,15 +190,297 @@ def pad_and_batch(requests: List[Request], batch_size: int, pad_id: int = 0):
     return out
 
 
-def serve(model, params, requests: List[Request], batch_size: int,
-          cache_len: int, temperature: float = 0.0) -> List[Result]:
-    engine = DecodeEngine(model, params, batch_size, cache_len, temperature)
+def serve_static(model, params, requests: List[Request], batch_size: int,
+                 cache_len: int, temperature: float = 0.0, seed: int = 0,
+                 engine: Optional[DecodeEngine] = None) -> List[Result]:
+    """Fixed-group scheduler: one prefill + decode loop per group of
+    ``batch_size`` requests (short groups padded with 1-token dummies).
+    Pass ``engine`` to reuse compiled executables across calls and to read
+    the round/wasted-step counters afterwards — the engine's own cache_len/
+    temperature/seed then apply and those arguments are ignored."""
+    if engine is None:
+        engine = DecodeEngine(model, params, batch_size, cache_len, temperature,
+                              seed)
+    else:
+        _check_engine_batch(engine, batch_size)
     results: List[Result] = []
     for group, toks in pad_and_batch(requests, batch_size):
-        max_new = max(r.max_new_tokens for r in group)
+        budgets = np.asarray([r.max_new_tokens for r in group], np.int64)
         eos = np.asarray([r.eos_id for r in group], np.int64)
-        gen, steps = engine.generate_batch(toks, max_new, eos)
+        gen, _ = engine.generate_batch(toks, budgets, eos)
         for i, r in enumerate(group):
-            results.append(Result(tokens=gen[i, : r.max_new_tokens],
-                                  prompt_len=len(r.prompt), steps=steps))
+            kept = _trim_at_eos(gen[i], r.max_new_tokens, r.eos_id)
+            results.append(Result(tokens=kept, prompt_len=len(r.prompt),
+                                  steps=len(kept)))
     return results[: len(requests)]
+
+
+# Legacy name: PR 1..3 callers imported ``serve`` for the fixed-batch path.
+serve = serve_static
+
+
+# ======================================================================================
+# Continuous batching: admission queue + mid-stream slot refill
+# ======================================================================================
+
+
+def cache_batch_axes(model, cache_len: int):
+    """Per-leaf batch axis of the model's decode cache, inferred by comparing
+    abstract caches at two batch sizes.  Every leaf must carry exactly one
+    batch axis — per-slot position buffers included — or slot refill cannot
+    gather/scatter that leaf."""
+    a = jax.eval_shape(lambda: model.init_cache(1, cache_len))
+    b = jax.eval_shape(lambda: model.init_cache(2, cache_len))
+
+    def one(x, y):
+        diffs = [i for i, (p, q) in enumerate(zip(x.shape, y.shape)) if p != q]
+        if len(diffs) != 1:
+            raise ValueError(
+                "cache leaf without a unique batch axis: "
+                f"{x.shape} vs {y.shape} — ContinuousEngine needs per-slot "
+                "cache rows (shared-clock caches cannot be refilled)")
+        return diffs[0]
+
+    return jax.tree.map(one, a, b)
+
+
+def scatter_cache_slots(dst, src, slot_ids: Sequence[int], axes):
+    """dst[..., slot, ...] = src[..., slot, ...] for each refilled slot, per
+    leaf along its batch axis.  Host-orchestrated (eager ops, outside jit), so
+    refill never touches the decode executable."""
+    sl = jnp.asarray(list(slot_ids), jnp.int32)
+
+    def one(d, s, ax):
+        idx = (slice(None),) * ax + (sl,)
+        return d.at[idx].set(jnp.take(s, sl, axis=ax))
+
+    return jax.tree.map(one, dst, src, axes)
+
+
+@dataclass
+class _Slot:
+    req_idx: int
+    prompt_len: int
+    budget: int
+    eos_id: int
+    emitted: list = field(default_factory=list)
+
+
+class ContinuousEngine(_EngineBase):
+    """Admission queue + per-slot lifecycle + mid-stream slot refill.
+
+    Every prompt is left-padded to one fixed prefill width (``prefill_len``,
+    default: the queue's longest prompt), so admission — initial fill and
+    every refill — reuses ONE compiled prefill; per-slot position clocks keep
+    every decode tick at one shape, so the whole queue is served by exactly
+    two executables (assert via ``compile_counts()``).  Greedy output is
+    token-identical to serving each request alone (per-request oracle): slot
+    rows never interact, and a refilled slot's scattered cache rows are
+    exactly the rows a solo prefill would have produced.
+
+    Token-only prompts (models whose prefill needs extra inputs — encoder
+    frames, vision patches — are served by ``serve_static`` only).
+    """
+
+    def __init__(self, model, params, batch_size: int, cache_len: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 prefill_len: Optional[int] = None, pad_id: int = 0):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.cache_len = cache_len
+        self.temperature = temperature
+        self.key = jax.random.key(seed)
+        self.prefill_len = prefill_len
+        self.pad_id = pad_id
+        self._prefill = jax.jit(model.prefill)
+
+        # One fused executable per decode tick: step + greedy argmax + clock
+        # advance, with the fed-back token and the per-slot positions staying
+        # device-resident (host pushes them only at refill rounds — per-tick
+        # host->device transfers would otherwise rival the step itself).
+        def tick(params, tok, pos, cache):
+            logits, cache = model.decode_step(params, tok, pos, cache)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt[:, None], logits, pos + 1, cache
+
+        self._tick = jax.jit(tick)
+        self._executables = {"prefill": self._prefill,
+                             "decode_step": self._tick}
+        self._axes = None
+        self._fresh = None
+        self.reset_counters()
+
+    def reset_counters(self) -> None:
+        super().reset_counters()
+        self.prefills = 0
+        self.refills = 0  # admissions into a previously-used slot
+
+    # ------------------------------ sampling ---------------------------------
+
+    def _sample_row(self, row: np.ndarray, req_idx: int, tok_step: int) -> int:
+        """Per-request RNG stream: token ``tok_step`` of request ``req_idx``
+        depends only on (engine seed, req_idx, tok_step, that row's logits) —
+        reproducible regardless of which slot the request landed in."""
+        if self.temperature <= 0.0:
+            return int(np.argmax(row))
+        k = jax.random.fold_in(jax.random.fold_in(self.key, req_idx), tok_step)
+        return int(jax.random.categorical(
+            k, jnp.asarray(row) / self.temperature))
+
+    # ------------------------------- serve -----------------------------------
+
+    def serve(self, requests: List[Request],
+              on_result: Optional[Callable[[int, Result], None]] = None
+              ) -> List[Result]:
+        if not requests:
+            return []
+        B = self.B
+        S0 = self.prefill_len or max(len(r.prompt) for r in requests)
+        longest = max(len(r.prompt) for r in requests)
+        if longest > S0:
+            raise ValueError(f"prompt of length {longest} exceeds the "
+                             f"prefill width {S0}")
+        if S0 > self.cache_len:
+            raise ValueError(f"prefill width {S0} exceeds cache_len "
+                             f"{self.cache_len}")
+        if self._axes is None:
+            self._axes = cache_batch_axes(self.model, self.cache_len)
+        if self._fresh is None:
+            self._fresh = self.model.init_cache(B, self.cache_len)
+
+        results: List[Optional[Result]] = [None] * len(requests)
+        pending = deque(enumerate(requests))
+        live: List[Optional[_Slot]] = [None] * B
+        used = [False] * B  # slots occupied before (this call): refill marker
+        cache = self._fresh
+        pos = np.zeros((B,), np.int64)  # host mirror of the per-slot clocks
+        last = np.zeros((B,), np.int64)  # host mirror of last sampled tokens
+        tok_dev = None  # (B, 1) int32 device-resident fed-back token
+        pos_dev = None  # (B,) int32 device-resident clocks
+
+        def emit(j: int, tok: int) -> None:
+            s = live[j]
+            s.emitted.append(tok)
+            if (s.eos_id >= 0 and tok == s.eos_id) or \
+                    len(s.emitted) >= s.budget:
+                res = Result(tokens=np.asarray(s.emitted, np.int64),
+                             prompt_len=s.prompt_len, steps=len(s.emitted))
+                results[s.req_idx] = res
+                if on_result is not None:
+                    on_result(s.req_idx, res)
+                live[j] = None
+
+        while True:
+            # admission: one fixed-shape prefill serves every free slot
+            # (budget-1 / instant-EOS admissions free their slot immediately,
+            # so keep refilling until slots or queue run dry)
+            admitted = False
+            while pending and any(s is None for s in live):
+                free = [j for j in range(B) if live[j] is None]
+                rows = np.full((B, S0), self.pad_id, np.int32)
+                take = []
+                for j in free:
+                    i, r = None, None
+                    while pending:  # zero-budget requests never take a slot
+                        i, r = pending.popleft()
+                        if r.max_new_tokens >= 1:
+                            break
+                        res = Result(tokens=np.zeros((0,), np.int64),
+                                     prompt_len=len(r.prompt), steps=0)
+                        results[i] = res
+                        if on_result is not None:
+                            on_result(i, res)
+                        i, r = None, None
+                    if r is None:
+                        break
+                    rows[j, S0 - len(r.prompt):] = r.prompt
+                    take.append((j, i, r))
+                if not take:
+                    break
+                logits, rcache = self._prefill(
+                    self.params, {"tokens": jnp.asarray(rows)}, self._fresh)
+                self.prefills += 1
+                self.batch_steps += 1
+                self.wasted_slot_steps += B - len(take)
+                self.refills += sum(used[j] for j, _, _ in take)
+                for j, _, _ in take:
+                    used[j] = True
+                cache = scatter_cache_slots(cache, rcache,
+                                            [j for j, _, _ in take],
+                                            self._axes)
+                lg = np.asarray(logits)
+                for j, i, r in take:
+                    live[j] = _Slot(req_idx=i, prompt_len=len(r.prompt),
+                                    budget=r.max_new_tokens, eos_id=r.eos_id)
+                    pos[j] = S0
+                    tok = self._sample_row(lg[j], i, 0)
+                    last[j] = tok
+                    emit(j, tok)
+                admitted = True
+
+            if all(s is None for s in live):
+                break
+
+            if admitted or tok_dev is None:
+                # push the host mirrors once per refill round, not per tick
+                tok_dev = jnp.asarray(last[:, None], jnp.int32)
+                pos_dev = jnp.asarray(pos, jnp.int32)
+
+            # Greedy slots with no live EOS can only leave the batch at a
+            # known budget boundary: run the fused tick (step + argmax +
+            # clock advance) up to that boundary with no host feedback, so
+            # dispatches pipeline like the static engine's inner loop; one
+            # sync then settles the whole span.  EOS-bearing or sampled
+            # slots need per-tick feedback (k = 1).
+            alive = [s for s in live if s is not None]
+            if self.temperature <= 0.0 and all(s.eos_id < 0 for s in alive):
+                k = min(s.budget - len(s.emitted) for s in alive)
+            else:
+                k = 1
+            n_free = sum(s is None for s in live)
+            pend = []
+            for _ in range(k):
+                tok_dev, logits, pos_dev, cache = self._tick(
+                    self.params, tok_dev, pos_dev, cache)
+                pend.append(tok_dev)
+                self.batch_steps += 1
+                self.wasted_slot_steps += n_free
+            if self.temperature <= 0.0:
+                span = [np.asarray(t)[:, 0] for t in pend]
+            else:  # k == 1: per-slot RNG sampling overrides the argmax token
+                lg = np.asarray(logits)
+                toks = last.copy()
+                for j in range(B):
+                    if live[j] is not None:
+                        toks[j] = self._sample_row(lg[j], live[j].req_idx,
+                                                   len(live[j].emitted))
+                tok_dev = jnp.asarray(toks[:, None], jnp.int32)
+                span = [toks]
+            for toks in span:
+                for j in range(B):
+                    s = live[j]
+                    if s is None:
+                        continue  # drained queue: slot decodes garbage
+                    last[j] = toks[j]
+                    emit(j, int(toks[j]))
+            pos += k
+
+        return results
+
+
+def serve_continuous(model, params, requests: List[Request], batch_size: int,
+                     cache_len: int, temperature: float = 0.0, seed: int = 0,
+                     prefill_len: Optional[int] = None,
+                     engine: Optional[ContinuousEngine] = None) -> List[Result]:
+    """Continuous-batching scheduler (admission queue + mid-stream refill).
+    Pass ``engine`` to reuse compiled executables across calls and to read
+    the round/wasted-step counters afterwards — the engine's own cache_len/
+    temperature/seed/prefill_len then apply and those arguments are
+    ignored."""
+    if engine is None:
+        engine = ContinuousEngine(model, params, batch_size, cache_len,
+                                  temperature, seed, prefill_len=prefill_len)
+    else:
+        _check_engine_batch(engine, batch_size)
+    return engine.serve(requests)

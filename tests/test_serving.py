@@ -1,0 +1,306 @@
+"""Serving schedulers: per-request EOS/steps accounting, per-slot budgets, and
+the ContinuousEngine (admission queue + mid-stream slot refill).
+
+The load-bearing contract is the sequential-oracle parity: a greedy
+ContinuousEngine queue must be TOKEN-IDENTICAL, request by request, to serving
+each request alone.  The oracle pads every prompt to the engine's prefill
+width and replicates it across all batch rows of the PR 1 fixed-batch engine
+(same compiled shapes — bf16 results are only bit-stable at equal shapes), so
+it goes through the old prefill + scalar-clock decode path: agreement proves
+the per-slot clocks, the refill gather/scatter, and slot isolation together.
+
+Fast tier runs small queues on a 2-layer model (exact + one table mode); the
+full-size queues across cache families (local:global KV, SSM state, xLSTM
+state) are ``slow`` and join the nightly job.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.serving.engine import (
+    ContinuousEngine,
+    DecodeEngine,
+    Request,
+    _trim_at_eos,
+    serve,
+    serve_continuous,
+    serve_static,
+)
+from tests.test_archs import reduced
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced("stablelm-3b").replace(n_layers=2)
+    model = build_model(cfg)
+    return model, model.init(jax.random.key(0))
+
+
+def mixed_requests(rng, n, eos_every=3, lo_len=3, hi_len=9, lo_new=2, hi_new=8):
+    """Mixed prompt lengths, budgets, and EOS ids (every ``eos_every``-th
+    request gets a plausibly-sampled token id as its EOS)."""
+    reqs = []
+    for i in range(n):
+        reqs.append(Request(
+            prompt=rng.integers(0, 100, (int(rng.integers(lo_len, hi_len)),))
+            .astype(np.int32),
+            max_new_tokens=int(rng.integers(lo_new, hi_new)),
+            eos_id=int(rng.integers(0, 128)) if i % eos_every == 1 else -1))
+    return reqs
+
+
+def sequential_oracle(model, params, batch_size, cache_len, prefill_len, req,
+                      engine=None):
+    """Serve ONE request through the fixed-batch engine, replicated across
+    all rows at the continuous engine's prefill width; row 0 is the oracle."""
+    if engine is None:
+        engine = DecodeEngine(model, params, batch_size, cache_len)
+    row = np.zeros((prefill_len,), np.int32)
+    row[prefill_len - len(req.prompt):] = req.prompt
+    gen, _ = engine.generate_batch(np.tile(row, (batch_size, 1)),
+                                   req.max_new_tokens, req.eos_id)
+    return _trim_at_eos(gen[0], req.max_new_tokens, req.eos_id)
+
+
+class TestTrimAtEos:
+    def test_cuts_after_first_eos_inclusive(self):
+        t = np.asarray([4, 7, 9, 7, 1])
+        np.testing.assert_array_equal(_trim_at_eos(t, 5, 7), [4, 7])
+        np.testing.assert_array_equal(_trim_at_eos(t, 5, 1), t)
+        np.testing.assert_array_equal(_trim_at_eos(t, 3, 1), [4, 7, 9])
+        np.testing.assert_array_equal(_trim_at_eos(t, 5, -1), t)
+
+
+class TestStaticAccounting:
+    def test_eos_trims_tokens_and_steps(self, tiny_model):
+        """Result.tokens must stop at the request's own first EOS; steps is
+        the per-request generated count, not the batch-wide loop count."""
+        model, params = tiny_model
+        rng = np.random.default_rng(0)
+        reqs = [Request(prompt=rng.integers(0, 100, (n,)).astype(np.int32),
+                        max_new_tokens=6) for n in (4, 5)]
+        base = serve_static(model, params, reqs, batch_size=2, cache_len=64)
+        # rerun with req0's 3rd token as its EOS: same greedy prefix, so the
+        # result must now be exactly tokens[:3] (EOS kept) with steps == 3
+        eos0 = int(base[0].tokens[2])
+        assert base[0].tokens[:2].tolist().count(eos0) == 0
+        reqs[0].eos_id = eos0
+        res = serve_static(model, params, reqs, batch_size=2, cache_len=64)
+        np.testing.assert_array_equal(res[0].tokens, base[0].tokens[:3])
+        assert res[0].steps == 3
+        # req1 has no EOS: untouched by its neighbour's early stop
+        np.testing.assert_array_equal(res[1].tokens, base[1].tokens)
+        assert res[1].steps == 6
+
+    def test_per_slot_budgets_stop_the_group_loop(self, tiny_model):
+        """A group of [EOS-bearing request, exhausted-budget request] must
+        stop decoding when the EOS fires — finished/dummy slots no longer
+        drag the loop to the group-wide max budget."""
+        model, params = tiny_model
+        rng = np.random.default_rng(1)
+        prompts = rng.integers(0, 100, (2, 4)).astype(np.int32)
+        eng = DecodeEngine(model, params, 2, 64)
+        gen, _ = eng.generate_batch(prompts, 8)
+        eos0 = int(gen[0, 2])
+        assert gen[0, :2].tolist().count(eos0) == 0
+        eng.reset_counters()
+        _, steps = eng.generate_batch(prompts, np.asarray([8, 1]),
+                                      np.asarray([eos0, -1]))
+        assert steps == 3  # slot 1 done at its budget, slot 0 at its EOS
+        assert eng.batch_steps == 3
+
+    def test_padding_slots_accounted_as_waste(self, tiny_model):
+        """3 requests at batch 2: the dummy padding slot must not inflate
+        per-request results, and the engine exposes the batch-wide counters
+        separately from Result.steps."""
+        model, params = tiny_model
+        rng = np.random.default_rng(2)
+        reqs = [Request(prompt=rng.integers(0, 100, (n,)).astype(np.int32),
+                        max_new_tokens=5) for n in (3, 7, 5)]
+        eng = DecodeEngine(model, params, 2, 64)
+        res = serve_static(model, params, reqs, batch_size=2, cache_len=64,
+                           engine=eng)
+        assert len(res) == 3
+        assert all(r.steps == len(r.tokens) == 5 for r in res)
+        assert eng.batch_steps == 10  # two groups x 5 rounds
+        # group 2's dummy slot sat done for rounds 2..5
+        assert eng.wasted_slot_steps == 4
+
+    def test_legacy_serve_alias(self):
+        assert serve is serve_static
+
+
+class TestContinuousEngine:
+    def test_greedy_matches_sequential_oracle(self, tiny_model):
+        """Acceptance: >= 8 mixed-length, mixed-EOS requests, token-identical
+        to the per-request oracle, zero recompiles after the first refill."""
+        model, params = tiny_model
+        rng = np.random.default_rng(3)
+        reqs = mixed_requests(rng, 8)
+        S0 = max(len(r.prompt) for r in reqs)
+        eng = ContinuousEngine(model, params, batch_size=2, cache_len=64)
+        out = eng.serve(reqs)
+        assert eng.refills >= 2
+        counts = eng.compile_counts()
+        if -1 not in counts.values():
+            assert counts == {"prefill": 1, "decode_step": 1}, counts
+        oracle = DecodeEngine(model, params, 2, 64)
+        for i, r in enumerate(reqs):
+            want = sequential_oracle(model, params, 2, 64, S0, r,
+                                     engine=oracle)
+            np.testing.assert_array_equal(out[i].tokens, want,
+                                          err_msg=f"req {i}")
+            assert out[i].steps == len(out[i].tokens)
+            assert out[i].prompt_len == len(r.prompt)
+
+    def test_greedy_matches_oracle_table_mode(self, tiny_model):
+        """Same contract through the fused table-pack kernels (acceptance:
+        at least one table mode besides exact)."""
+        from repro.approx import ApproxConfig
+
+        base, _ = tiny_model
+        cfg = base.cfg.replace(
+            approx=ApproxConfig(mode="table_pack", e_a=1e-4, omega=0.2))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(4)
+        reqs = mixed_requests(rng, 8, lo_new=2, hi_new=6)
+        S0 = max(len(r.prompt) for r in reqs)
+        eng = ContinuousEngine(model, params, batch_size=2, cache_len=64)
+        out = eng.serve(reqs)
+        assert eng.refills >= 2
+        counts = eng.compile_counts()
+        if -1 not in counts.values():
+            assert counts == {"prefill": 1, "decode_step": 1}, counts
+        oracle = DecodeEngine(model, params, 2, 64)
+        for i, r in enumerate(reqs):
+            want = sequential_oracle(model, params, 2, 64, S0, r,
+                                     engine=oracle)
+            np.testing.assert_array_equal(out[i].tokens, want,
+                                          err_msg=f"req {i}")
+
+    def test_refill_keeps_request_identity(self, tiny_model):
+        """Results come back in queue order with each request's own prompt
+        length and budget, across several refill generations."""
+        model, params = tiny_model
+        rng = np.random.default_rng(5)
+        reqs = [Request(prompt=rng.integers(0, 100, (3 + i,)).astype(np.int32),
+                        max_new_tokens=1 + (i % 4)) for i in range(9)]
+        out = serve_continuous(model, params, reqs, batch_size=3, cache_len=64)
+        for i, (r, res) in enumerate(zip(reqs, out)):
+            assert res.prompt_len == len(r.prompt), i
+            assert res.steps == len(res.tokens) == r.max_new_tokens, i
+
+    def test_per_slot_rng_reproducible_and_slot_independent(self, tiny_model):
+        """temperature > 0: a request's sampled tokens depend only on
+        (engine seed, its queue index, its own logits) — identical across
+        runs and across different slot assignments/admission times."""
+        model, params = tiny_model
+        rng = np.random.default_rng(6)
+        prompts = [rng.integers(0, 100, (4,)).astype(np.int32)
+                   for _ in range(3)]
+        mk = lambda order, budgets: [
+            Request(prompt=prompts[i], max_new_tokens=b)
+            for i, b in zip(order, budgets)]
+        a1 = serve_continuous(model, params, mk((0, 1, 2), (6, 2, 4)),
+                              batch_size=2, cache_len=64, temperature=1.0,
+                              seed=9)
+        a2 = serve_continuous(model, params, mk((0, 1, 2), (6, 2, 4)),
+                              batch_size=2, cache_len=64, temperature=1.0,
+                              seed=9)
+        for r1, r2 in zip(a1, a2):
+            np.testing.assert_array_equal(r1.tokens, r2.tokens)
+        # swap the first two requests: request 2 keeps its queue index but is
+        # admitted into a different slot/time; its stream must not change
+        b = serve_continuous(model, params, mk((1, 0, 2), (2, 6, 4)),
+                             batch_size=2, cache_len=64, temperature=1.0,
+                             seed=9)
+        np.testing.assert_array_equal(a1[2].tokens, b[2].tokens)
+        # and a different seed must actually change something
+        c = serve_continuous(model, params, mk((0, 1, 2), (6, 2, 4)),
+                             batch_size=2, cache_len=64, temperature=1.0,
+                             seed=10)
+        assert any(not np.array_equal(x.tokens, y.tokens)
+                   for x, y in zip(a1, c))
+
+    def test_wastes_no_more_than_static(self, tiny_model):
+        """The serve-bench CI gate's deterministic half: on a staggered
+        queue, continuous must strand fewer slot-rounds than static."""
+        model, params = tiny_model
+        rng = np.random.default_rng(7)
+        reqs = [Request(prompt=rng.integers(0, 100, (6,)).astype(np.int32),
+                        max_new_tokens=12 if i % 2 == 0 else 2)
+                for i in range(8)]
+        stat = DecodeEngine(model, params, 2, 64)
+        serve_static(model, params, reqs, 2, 64, engine=stat)
+        cont = ContinuousEngine(model, params, 2, 64)
+        cont.serve(reqs)
+        assert cont.wasted_fraction < stat.wasted_fraction
+        assert cont.batch_steps < stat.batch_steps
+
+    def test_zero_budget_matches_static(self, tiny_model):
+        """max_new_tokens=0 yields an empty result in BOTH schedulers (it
+        never occupies a continuous slot), so switching scheduler cannot
+        conjure phantom tokens."""
+        model, params = tiny_model
+        rng = np.random.default_rng(9)
+        reqs = [Request(prompt=rng.integers(0, 100, (4,)).astype(np.int32),
+                        max_new_tokens=m) for m in (3, 0, 2, 0)]
+        for res in (serve_static(model, params, reqs, 2, 64),
+                    serve_continuous(model, params, reqs, 2, 64)):
+            assert [r.steps for r in res] == [3, 0, 2, 0]
+            assert res[1].tokens.size == 0 and res[3].tokens.size == 0
+
+    def test_engine_batch_size_mismatch_rejected(self, tiny_model):
+        model, params = tiny_model
+        eng = DecodeEngine(model, params, 2, 64)
+        with pytest.raises(ValueError, match="batch size"):
+            serve_static(model, params, [Request(np.zeros((2,), np.int32))],
+                         batch_size=4, cache_len=64, engine=eng)
+
+    def test_prompt_longer_than_prefill_len_rejected(self, tiny_model):
+        model, params = tiny_model
+        eng = ContinuousEngine(model, params, 2, 64, prefill_len=4)
+        with pytest.raises(ValueError, match="exceeds the prefill width"):
+            eng.serve([Request(prompt=np.zeros((6,), np.int32))])
+
+
+@pytest.mark.slow
+class TestContinuousAcrossFamilies:
+    """Full-size queues through every cache family the engine can refill:
+    local:global KV rings (gemma3), Mamba2 state + shared-attention KV
+    (zamba2), positionless xLSTM state, and the quantized table mode."""
+
+    @pytest.mark.parametrize("arch,mode", [
+        ("gemma3-12b", "exact"),
+        ("zamba2-1.2b", "exact"),
+        ("xlstm-125m", "exact"),
+        ("stablelm-3b", "quant_pack"),
+    ])
+    def test_oracle_parity_full_size(self, arch, mode):
+        from repro.approx import ApproxConfig
+
+        cfg = reduced(arch)
+        if mode != "exact":
+            cfg = cfg.replace(approx=ApproxConfig(mode=mode, e_a=1e-4,
+                                                  omega=0.2))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(8)
+        reqs = mixed_requests(rng, 10, lo_len=3, hi_len=12, lo_new=2,
+                              hi_new=12)
+        S0 = max(len(r.prompt) for r in reqs)
+        eng = ContinuousEngine(model, params, batch_size=3, cache_len=64)
+        out = eng.serve(reqs)
+        assert eng.refills >= 2
+        counts = eng.compile_counts()
+        if -1 not in counts.values():
+            assert counts == {"prefill": 1, "decode_step": 1}, counts
+        oracle = DecodeEngine(model, params, 3, 64)
+        for i, r in enumerate(reqs):
+            want = sequential_oracle(model, params, 3, 64, S0, r,
+                                     engine=oracle)
+            np.testing.assert_array_equal(out[i].tokens, want,
+                                          err_msg=f"{arch}/{mode} req {i}")
