@@ -30,6 +30,9 @@ BENCH_ROUTEDPACK_JSON = os.path.join(
 BENCH_SERVE_JSON = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_serve.json")
+BENCH_SHARDEDPACK_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_shardedpack.json")
 
 
 def _time(f, *args, reps=20) -> float:
@@ -298,6 +301,83 @@ def routed_dispatch_bench(size: int = 1 << 20, e_a: float = 1e-4,
     return rows
 
 
+def shardedpack_bench(size: int = 1 << 18, e_a: float = 1e-4,
+                      shard_counts=(2, 4),
+                      out_path: str = BENCH_SHARDEDPACK_JSON) -> List[tuple]:
+    """ShardedPack per-shard VMEM high-water + dispatch -> BENCH_shardedpack.json.
+
+    The sharded pack exists to beat the REPLICATED pack's per-core VMEM
+    residency once the pack outgrows a core; this bench records, per shard
+    count, the per-shard high-water (padded values slice + replicated selector
+    metadata + the local_base/owned planes — what one core actually pins) next
+    to the replicated residency, plus the off-mesh dispatch latency (one
+    kernel launch PER SHARD on this host; a real mesh runs the S launches on
+    S cores concurrently and pays one psum instead).  The CI gate is the
+    memory claim: per-shard high-water must be strictly below the replicated
+    footprint for every shard count, or the sharding buys nothing.
+    """
+    from repro.approx import DEFAULT_PACK_FUNCTIONS, build_pack, from_sharded_layout
+    from repro.core import cached_table, pack_layout, shard_pack_layout
+    from repro.kernels.ops import table_pack_lookup
+    from repro.kernels.table_pack_lookup import sharded_pack_lookup_pallas
+
+    names = DEFAULT_PACK_FUNCTIONS
+    x = jnp.asarray(np.random.default_rng(6).normal(0, 3, size).astype(np.float32))
+    specs = [cached_table(n, e_a) for n in names]
+    layout = pack_layout(specs)
+    pack = build_pack(names, e_a)
+    repl = layout.vmem()  # the canonical replicated residency the tests compare
+    t_repl = _time_min(lambda v: table_pack_lookup(pack, "silu", v), x)
+    report = {"e_a": e_a, "functions": list(names), "probe_size": size,
+              "replicated": {"footprint_entries": layout.footprint,
+                             "vmem_padded_bytes": repl.padded_bytes,
+                             "dispatch_us": round(t_repl, 1)},
+              "shards": {}}
+    rows = [("kernel.shardedpack.replicated.vmem_bytes", repl.padded_bytes,
+             f"dispatch={t_repl:.1f}us F={len(names)}")]
+    print(f"[shardedpack] replicated vmem={repl.padded_bytes}B "
+          f"dispatch={t_repl:8.1f}us")
+    for S in shard_counts:
+        slay = shard_pack_layout(layout, S)
+        spack = from_sharded_layout(slay)
+        c = slay.vmem()
+        t = _time_min(
+            lambda v, p=spack: sharded_pack_lookup_pallas(p, "silu", v), x)
+        red = repl.padded_bytes / c.padded_bytes
+        report["shards"][str(S)] = {
+            "shard_sizes": [int(s) for s in slay.shard_sizes],
+            "max_shard_entries": slay.max_shard_entries,
+            "vmem_padded_bytes_per_shard": c.padded_bytes,
+            "vmem_reduction_vs_replicated": round(red, 2),
+            "dispatch_us": round(t, 1),
+            "kernel_launches": S,
+        }
+        rows.append((f"kernel.shardedpack.s{S}.vmem_bytes", c.padded_bytes,
+                     f"{red:.2f}x smaller/core, dispatch={t:.1f}us "
+                     f"({S} launches off-mesh)"))
+        print(f"[shardedpack] S={S} per-shard vmem={c.padded_bytes}B "
+              f"({red:.2f}x) dispatch={t:8.1f}us")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"[shardedpack] report -> {out_path}")
+    return rows
+
+
+def shardedpack_bench_gate(report_path: str = BENCH_SHARDEDPACK_JSON) -> None:
+    """CI smoke gate over BENCH_shardedpack.json: every shard count's
+    per-shard VMEM high-water must be strictly below the replicated pack's."""
+    with open(report_path) as f:
+        report = json.load(f)
+    repl = report["replicated"]["vmem_padded_bytes"]
+    for S, m in report["shards"].items():
+        per = m["vmem_padded_bytes_per_shard"]
+        if per >= repl:
+            raise SystemExit(
+                f"shardedpack[S={S}]: per-shard VMEM {per}B >= replicated "
+                f"{repl}B — sharding buys no memory")
+
+
 def serve_bench(modes=("exact", "table_pack"), n_requests: int = 8,
                 batch: int = 2, long_budget: int = 24, short_budget: int = 2,
                 out_path: str = BENCH_SERVE_JSON) -> List[tuple]:
@@ -439,6 +519,9 @@ def main() -> None:
     ap.add_argument("--serve", action="store_true",
                     help="emit BENCH_serve.json (continuous vs static "
                          "serving throughput + wasted-step fraction)")
+    ap.add_argument("--shardedpack", action="store_true",
+                    help="emit BENCH_shardedpack.json (per-shard VMEM "
+                         "high-water vs replicated + dispatch latency)")
     ap.add_argument("--size", type=int, default=None,
                     help="probe tensor size (default 2^18; 2^20 for "
                          "--routedpack so static and routed tile to the same "
@@ -466,11 +549,16 @@ def main() -> None:
     elif args.serve:
         serve_bench(out_path=args.out or BENCH_SERVE_JSON)
         serve_bench_gate(args.out or BENCH_SERVE_JSON)
+    elif args.shardedpack:
+        shardedpack_bench(args.size or (1 << 18), args.ea,
+                          out_path=args.out or BENCH_SHARDEDPACK_JSON)
+        shardedpack_bench_gate(args.out or BENCH_SHARDEDPACK_JSON)
     else:
         activation_bench(args.size or (1 << 18))
         interval_count_flatness()
         pack_dispatch_bench(args.size or (1 << 18))
         routed_dispatch_bench(args.size or (1 << 20))
+        shardedpack_bench(args.size or (1 << 18))
 
 
 if __name__ == "__main__":

@@ -7,8 +7,15 @@
    the differentiable activation wrapper, and the error-bound check.
 5. QuantPack: the error budget split between interpolation and int8/int16
    code rounding, with the dequantize-on-read kernel still inside Ea.
+6. Beyond one core: RoutedPack (per-row dynamic fn_id dispatch — one
+   executable serves mixed-function batches, docs/routedpack.md) and
+   ShardedPack (the pack's values split over the mesh 'model' axis with
+   per-shard base rebasing, bit-identical to the replicated pack,
+   docs/sharding.md).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+(The full mode matrix — every ApproxConfig mode with its kernel, oracle, and
+tests — is in docs/architecture.md.)
 """
 
 import jax
@@ -97,4 +104,31 @@ for name in QNAMES:
         eval_quant_pack_ref(qpack, name, xs)
         - jnp.asarray(fn.f(np.asarray(xs, np.float64))))))
     print(f"  {name:12s} dequantize-on-read max err = {err:.2e} <= Ea = {QEA}")
+
+print("\n=== 6. Routed + sharded dispatch: past one executable, past one core ===")
+# Routed: fn_ids are a RUNTIME operand (scalar prefetch) — one executable
+# serves any per-row mix of members; re-routing never recompiles.
+from repro.approx import ApproxConfig as AC
+
+cfg = AC(mode="routed_pack", e_a=QEA)
+routed = cfg.routed_fn(("gelu", "tanh", "sigmoid"))  # row i -> function i
+xr = jnp.asarray(np.random.default_rng(1).normal(0, 2, (3, 256)).astype(np.float32))
+static = jnp.stack([cfg.unary(n)(xr[i]) for i, n in
+                    enumerate(("gelu", "tanh", "sigmoid"))])
+print(f"routed vs per-row static dispatch max diff: "
+      f"{float(jnp.max(jnp.abs(routed(xr) - static))):.1e} (bit-identical)")
+
+# Sharded: the pack's values vector split pack_shards ways (sub-interval
+# granularity, per-shard base rebasing).  Off-mesh it sums a stacked shard
+# axis; under a use_sharding mesh whose 'model' axis is pack_shards wide it
+# runs shard_map + psum with ONE slice per core — same bits either way.
+scfg = AC(mode="sharded_pack", e_a=QEA, pack_shards=2)
+spack = scfg.sharded_pack()
+repl = scfg.pack()
+y_sh = jax.jit(scfg.unary("gelu"))(xr)
+y_re = jax.jit(AC(mode="table_pack", e_a=QEA).unary("gelu"))(xr)
+print(f"sharded vs replicated pack max diff:        "
+      f"{float(jnp.max(jnp.abs(y_sh - y_re))):.1e} (bit-identical)")
+print(f"per-core values entries: {repl.footprint} replicated -> "
+      f"{spack.footprint_per_shard} per shard ({spack.n_shards} shards)")
 print("\nquickstart OK")

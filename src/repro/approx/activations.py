@@ -10,8 +10,11 @@ int8/int16 entry codes + dequantize-on-read kernels), ``quant_pack_ref``
 per-row fn_id dispatch — the function identity is a runtime operand of a
 scalar-prefetch kernel, so mixed-function batches (MoE-style routed
 activations; see :meth:`ApproxConfig.routed_fn`) and every member's unary
-share one compiled executable.  Configured per-model via
-:class:`ApproxConfig`.
+share one compiled executable — or the ``sharded_pack`` / ``sharded_pack_ref``
+variants, which partition the pack's values vector ``pack_shards`` ways over
+the mesh 'model' axis (per-shard base rebasing, shard-local masked lookup,
+psum combine) for packs that outgrow one core's VMEM.  Configured per-model
+via :class:`ApproxConfig`.
 """
 
 from __future__ import annotations
@@ -28,26 +31,28 @@ from repro.core.flow import cached_table
 from repro.core.functions import get as get_function
 
 from .jax_table import JaxTable, from_spec, make_table_fn
-from .table_pack import (QuantTablePack, TablePack, build_pack,
-                         build_quant_pack, make_pack_fn, make_quant_pack_fn,
-                         make_routed_fn, make_routed_unary_fn)
+from .table_pack import (QuantTablePack, ShardedTablePack, TablePack,
+                         build_pack, build_quant_pack, build_sharded_pack,
+                         make_pack_fn, make_quant_pack_fn, make_routed_fn,
+                         make_routed_unary_fn, make_sharded_pack_fn)
 
 Mode = str  # "exact" | "table_ref" | "table_pallas" | "table_pack" |
 #             "table_pack_ref" | "quant_pack" | "quant_pack_ref" |
 #             "routed_pack" | "routed_pack_ref" | "routed_quant_pack" |
-#             "routed_quant_pack_ref"
+#             "routed_quant_pack_ref" | "sharded_pack" | "sharded_pack_ref"
 
 ROUTED_MODES = ("routed_pack", "routed_pack_ref", "routed_quant_pack",
                 "routed_quant_pack_ref")
+SHARDED_MODES = ("sharded_pack", "sharded_pack_ref")
 TABLE_MODES = ("table_ref", "table_pallas", "table_pack", "table_pack_ref",
-               "quant_pack", "quant_pack_ref") + ROUTED_MODES
+               "quant_pack", "quant_pack_ref") + ROUTED_MODES + SHARDED_MODES
 PACK_MODES = ("table_pack", "table_pack_ref")
 QUANT_PACK_MODES = ("quant_pack", "quant_pack_ref")
 # modes whose pack artifact is the quantized one (vs the f32 pack)
 _QUANT_BACKED = QUANT_PACK_MODES + ("routed_quant_pack", "routed_quant_pack_ref")
 # modes whose runtime is the Pallas kernels (vs a jnp oracle)
 _PALLAS_BACKED = ("table_pallas", "table_pack", "quant_pack", "routed_pack",
-                  "routed_quant_pack")
+                  "routed_quant_pack", "sharded_pack")
 
 
 def odd_extension(fn):
@@ -90,6 +95,7 @@ DEFAULT_PACK_FUNCTIONS = (
 # constructors re-request the same pack for every layer/activation.
 _PACK_CACHE: Dict[tuple, TablePack] = {}
 _QUANT_PACK_CACHE: Dict[tuple, QuantTablePack] = {}
+_SHARDED_PACK_CACHE: Dict[tuple, ShardedTablePack] = {}
 
 _EXACT: Dict[str, Callable] = {
     "gelu": lambda x: jax.nn.gelu(x, approximate=False),
@@ -163,6 +169,11 @@ class ApproxConfig:
     # of int8/int16 from the budget split, or force "int8"/"int16").
     quant_rho: float = 0.9
     pack_dtype: str = "auto"
+    # sharded_pack modes: how many ways the pack's values vector is split
+    # (sub-interval granularity, per-shard base rebasing).  Runs distributed
+    # when a use_sharding mesh binds a 'model' axis of this width, otherwise
+    # as a stacked-shard-axis sum on one device — bit-identical either way.
+    pack_shards: int = 2
 
     def table_for(self, name: str) -> JaxTable:
         reg_name = _TABLE_NAME.get(name, name)
@@ -198,6 +209,26 @@ class ApproxConfig:
                 intervals=dict(overrides))
         return _QUANT_PACK_CACHE[key]
 
+    def sharded_pack(self) -> ShardedTablePack:
+        """The shared pack, values-sharded ``pack_shards`` ways over 'model'."""
+        names = tuple(self.pack_functions)
+        overrides = tuple(sorted(
+            (k, v) for k, v in self.interval_overrides.items() if k in names))
+        key = (names, self.e_a, self.algorithm, self.omega, overrides,
+               self.pack_shards)
+        if key not in _SHARDED_PACK_CACHE:
+            _SHARDED_PACK_CACHE[key] = build_sharded_pack(
+                names, self.e_a, self.pack_shards, algorithm=self.algorithm,
+                omega=self.omega, intervals=dict(overrides))
+        return _SHARDED_PACK_CACHE[key]
+
+    def _pack_for_mode(self):
+        if self.mode in _QUANT_BACKED:
+            return self.quant_pack()
+        if self.mode in SHARDED_MODES:
+            return self.sharded_pack()
+        return self.pack()
+
     def unary(self, name: str) -> Callable[[jax.Array], jax.Array]:
         """The activation callable for this config."""
         if self.mode == "exact" or name in _NEVER_TABLED:
@@ -209,8 +240,9 @@ class ApproxConfig:
         if self.exact_grad:
             fn = get_function(reg_name)
             exact_d1 = partial(fn.d1f, xp=jnp)
-        if self.mode in PACK_MODES + QUANT_PACK_MODES + ROUTED_MODES:
-            pack = self.quant_pack() if self.mode in _QUANT_BACKED else self.pack()
+        if self.mode in (PACK_MODES + QUANT_PACK_MODES + ROUTED_MODES
+                         + SHARDED_MODES):
+            pack = self._pack_for_mode()
             if reg_name not in pack.names:
                 raise KeyError(
                     f"{reg_name!r} is not in pack_functions={pack.names}; add it "
@@ -219,6 +251,8 @@ class ApproxConfig:
                 # dynamic dispatch with uniform fn_ids: the member identity is
                 # a runtime operand, so every unary shares ONE executable
                 make = make_routed_unary_fn
+            elif self.mode in SHARDED_MODES:
+                make = make_sharded_pack_fn
             else:
                 make = make_quant_pack_fn if self.mode in _QUANT_BACKED \
                     else make_pack_fn
@@ -261,7 +295,7 @@ class ApproxConfig:
             return _routed_exact(names)
         if self.mode not in TABLE_MODES:
             raise ValueError(f"unknown approx mode {self.mode!r}")
-        pack = self.quant_pack() if self.mode in _QUANT_BACKED else self.pack()
+        pack = self._pack_for_mode()
         for n in names:
             if isinstance(n, str) and n not in pack.names:
                 raise KeyError(

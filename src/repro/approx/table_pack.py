@@ -28,8 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flow import cached_table
-from repro.core.packing import (PackLayout, QuantPackLayout, pack_layout,
-                                quant_pack_layout)
+from repro.core.packing import (PackLayout, QuantPackLayout,
+                                ShardedPackLayout, pack_layout,
+                                quant_pack_layout, shard_pack_layout)
 from repro.core.quantize import plan_quant_member
 from repro.core.table import TableSpec
 
@@ -470,6 +471,323 @@ def make_pack_fn(
 
 
 # --------------------------------------------------------------------------------------
+# ShardedPack — the pack's values vector partitioned over the 'model' mesh axis.
+# --------------------------------------------------------------------------------------
+#
+# The packs above are REPLICATED: every core pins the whole values vector in
+# VMEM.  Once the pack outgrows a core's budget, the values are instead
+# partitioned at sub-interval granularity (core.packing.shard_pack_layout) and
+# each shard answers ONLY the elements whose selected sub-interval it owns:
+# every shard runs the full (replicated, small) comparator plane, gathers from
+# its LOCAL slice with the rebased base, masks unowned elements to zero, and
+# the shard contributions combine by summation — psum over the 'model' axis
+# under shard_map, a plain sum over the stacked shard axis off-mesh.  Exactly
+# one shard owns any selected sub-interval, so the sum adds one real value and
+# S-1 zeros: the result is BIT-IDENTICAL to the replicated pack (x + 0.0 == x
+# for every float x), which tests/test_sharded_pack.py asserts per function.
+
+
+class ShardedTablePack(NamedTuple):
+    """Device-ready sharded multi-function pack.
+
+    ``values`` carries one PADDED slice per shard (stacked so the shard axis
+    can be laid over the 'model' mesh axis); ``local_base``/``owned`` are the
+    per-shard planes (rebased addresses + ownership mask); the selector
+    metadata stays replicated.  See :class:`repro.core.packing.ShardedPackLayout`.
+    """
+
+    names: Tuple[str, ...]  # static: member function names (fn_id order)
+    n_intervals: Tuple[int, ...]  # static: real sub-interval count per member
+    n_shards: int  # static: width of the shard (mesh 'model') axis
+    boundaries: jax.Array  # (F, n_max+1) f32, right-padded +inf  [replicated]
+    inv_delta: jax.Array  # (F, n_max)   f32                      [replicated]
+    seg_count: jax.Array  # (F, n_max)   f32                      [replicated]
+    local_base: jax.Array  # (S, F, n_max) f32 — SHARD-LOCAL values index
+    owned: jax.Array  # (S, F, n_max) f32 — 1.0 where shard s owns (f, j)
+    values: jax.Array  # (S, m_max)   f32 — per-shard padded slices
+
+    @property
+    def n_functions(self) -> int:
+        return len(self.names)
+
+    @property
+    def n_max(self) -> int:
+        return self.inv_delta.shape[1]
+
+    @property
+    def footprint_per_shard(self) -> int:
+        """Padded per-shard entry count — the VMEM high-water every core pays."""
+        return self.values.shape[1]
+
+    def fn_id(self, name: str) -> int:
+        return _member_id(self.names, name)
+
+    def member_id(self, fn) -> int:
+        """Name or integer fn_id -> validated index (KeyError otherwise)."""
+        return _member_id(self.names, fn)
+
+    def routing_scalars(self) -> Tuple[np.ndarray, ...]:
+        """Prefetched scalar operands for dynamic fn_id dispatch (same contract
+        as :meth:`TablePack.routing_scalars`)."""
+        return (np.asarray(self.n_intervals, dtype=np.int32),)
+
+
+def from_sharded_layout(slayout: ShardedPackLayout,
+                        dtype=jnp.float32) -> ShardedTablePack:
+    if slayout.max_shard_entries >= (1 << 24):
+        raise ValueError("shard slice exceeds f32 exact-integer range")
+    lay = slayout.layout
+    S, m_max = slayout.n_shards, slayout.max_shard_entries
+    vals = np.zeros((S, m_max), dtype=np.float64)
+    for s in range(S):
+        sv = slayout.shard_values(s)
+        vals[s, : len(sv)] = sv
+    lb = np.zeros((S,) + slayout.owner.shape, dtype=np.float64)
+    own = np.zeros((S,) + slayout.owner.shape, dtype=np.float64)
+    for s in range(S):
+        mask = slayout.owner == s
+        lb[s][mask] = slayout.local_base[mask]
+        own[s][mask] = 1.0
+    return ShardedTablePack(
+        names=lay.names,
+        n_intervals=lay.n_intervals,
+        n_shards=S,
+        boundaries=jnp.asarray(lay.boundaries, dtype=dtype),
+        inv_delta=jnp.asarray(lay.inv_delta, dtype=dtype),
+        seg_count=jnp.asarray(lay.seg_count.astype(np.float64), dtype=dtype),
+        local_base=jnp.asarray(lb, dtype=dtype),
+        owned=jnp.asarray(own, dtype=dtype),
+        values=jnp.asarray(vals, dtype=dtype),
+    )
+
+
+def shard_pack(pack_or_specs, n_shards: int) -> ShardedTablePack:
+    """Shard already-built TableSpecs (or a PackLayout) into a runtime pack."""
+    layout = (pack_or_specs if isinstance(pack_or_specs, PackLayout)
+              else pack_layout(list(pack_or_specs)))
+    return from_sharded_layout(shard_pack_layout(layout, n_shards))
+
+
+def build_sharded_pack(
+    names: Sequence[str],
+    e_a: float,
+    n_shards: int,
+    *,
+    algorithm: str = "hierarchical",
+    omega: float = 0.3,
+    intervals: Optional[dict] = None,
+) -> ShardedTablePack:
+    """Design flow for every name, fused into one pack, sharded ``n_shards`` ways."""
+    intervals = intervals or {}
+    specs = []
+    for name in names:
+        lo, hi = intervals.get(name, (None, None))
+        specs.append(cached_table(name, e_a, lo, hi, algorithm=algorithm,
+                                  omega=omega))
+    return shard_pack(specs, n_shards)
+
+
+def shard_contrib_ref(values_s, lbase_row, own_row, brow, invd_row, segs_row,
+                      n: int, xf: jax.Array, *, extrapolate: bool,
+                      slope: bool = False) -> jax.Array:
+    """ONE shard's masked contribution — the sharded-lookup contract.
+
+    Runs the replicated comparator plane, gathers from the LOCAL values slice
+    at the rebased address, and zeroes elements whose selected sub-interval
+    this shard does not own.  The owner shard executes exactly the replicated
+    pack's compare/gather/FMA sequence on the same f32 numbers (the slice
+    holds the same entries, only re-addressed), so summing the S contributions
+    reproduces ``eval_pack_ref``/``eval_pack_slope`` bit for bit.  Shared by
+    the jnp oracle, the shard_map mesh body, and (as the reference for) the
+    Pallas shard kernel.
+    """
+    j = select_interval(brow, n, xf)
+    p = jnp.take(brow, j, axis=0)
+    invd = jnp.take(invd_row, j, axis=0)
+    base = jnp.take(lbase_row, j, axis=0)
+    segs = jnp.take(segs_row, j, axis=0)
+    own = jnp.take(own_row, j, axis=0)
+    u = (xf - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    # clip: unowned elements may address past the local slice; they are masked
+    y0 = jnp.take(values_s, a, axis=0, mode="clip")
+    y1 = jnp.take(values_s, a + 1, axis=0, mode="clip")
+    if slope:
+        out = (y1 - y0) * invd
+        if not extrapolate:
+            inside = (xf >= brow[0]) & (xf < brow[n])
+            out = out * inside.astype(jnp.float32)
+    else:
+        t = u - i
+        if not extrapolate:
+            t = jnp.clip(t, 0.0, 1.0)
+        out = y0 + t * (y1 - y0)
+    return jnp.where(own > 0, out, 0.0)
+
+
+def _sharded_sum_ref(pack: ShardedTablePack, fid: int, xf: jax.Array,
+                     extrapolate: bool, slope: bool) -> jax.Array:
+    out = None
+    for s in range(pack.n_shards):
+        c = shard_contrib_ref(
+            pack.values[s], pack.local_base[s, fid], pack.owned[s, fid],
+            pack.boundaries[fid], pack.inv_delta[fid], pack.seg_count[fid],
+            pack.n_intervals[fid], xf, extrapolate=extrapolate, slope=slope)
+        out = c if out is None else out + c
+    return out
+
+
+def eval_sharded_ref(pack: ShardedTablePack, fn, x: jax.Array, *,
+                     extrapolate: bool = False) -> jax.Array:
+    """Pure-jnp sharded oracle (stacked shard axis, no mesh required) —
+    bit-identical to the replicated ``eval_pack_ref``."""
+    fid = _resolve(pack, fn)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    return _sharded_sum_ref(pack, fid, xf, extrapolate, slope=False).astype(dtype)
+
+
+def eval_sharded_slope(pack: ShardedTablePack, fn, x: jax.Array, *,
+                       extrapolate: bool = False) -> jax.Array:
+    """d/dx of the sharded surrogate — bit-identical to ``eval_pack_slope``."""
+    fid = _resolve(pack, fn)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    return _sharded_sum_ref(pack, fid, xf, extrapolate, slope=True).astype(dtype)
+
+
+def _active_pack_mesh(pack: ShardedTablePack):
+    """The bound mesh IF its 'model' axis matches the pack's shard count.
+
+    ``use_sharding`` binds the mesh at trace time; when no binding is active
+    (or the model axis width differs) the stacked-shard-axis path below is
+    used instead — same math, same bits, no distribution.
+    """
+    from repro.parallel.sharding import current_mesh
+
+    mesh = current_mesh()
+    if (mesh is not None and "model" in mesh.axis_names
+            and mesh.shape["model"] == pack.n_shards):
+        return mesh
+    return None
+
+
+def eval_sharded_mesh(pack: ShardedTablePack, fn, x: jax.Array, mesh, *,
+                      extrapolate: bool = False, use_pallas: bool = False,
+                      slope: bool = False) -> jax.Array:
+    """Sharded evaluation distributed over ``mesh``'s 'model' axis.
+
+    Each device holds ONE shard's values slice + planes (lay the pack out with
+    :func:`repro.parallel.sharding.sharded_pack_pspecs`); the shard_map body
+    computes the local masked contribution and a psum over 'model' combines
+    them.  psum adds one owner value and S-1 zeros, so the result is
+    bit-identical to the replicated pack AND to the off-mesh stacked sum.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    fid = _resolve(pack, fn)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    n = pack.n_intervals[fid]
+
+    def body(values, lbase, own, xloc):
+        if use_pallas:
+            from repro.kernels.table_pack_lookup import sharded_shard_contrib_pallas
+
+            c = sharded_shard_contrib_pallas(
+                pack.boundaries, pack.inv_delta, pack.seg_count,
+                lbase[0], own[0], values[0], xloc,
+                fn_id=fid, n_intervals=n, extrapolate=extrapolate, slope=slope)
+        else:
+            c = shard_contrib_ref(
+                values[0], lbase[0, fid], own[0, fid], pack.boundaries[fid],
+                pack.inv_delta[fid], pack.seg_count[fid], n, xloc,
+                extrapolate=extrapolate, slope=slope)
+        return jax.lax.psum(c, "model")
+
+    rep = P(*(None,) * xf.ndim)
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model"), P("model"), P("model"), rep),
+        out_specs=rep,
+        # pallas_call has no shard_map replication rule; the explicit psum
+        # above makes the output replicated regardless
+        check_rep=not use_pallas,
+    )(pack.values, pack.local_base, pack.owned, xf)
+    return out.astype(dtype)
+
+
+def make_sharded_pack_fn(
+    pack: ShardedTablePack,
+    name: str,
+    *,
+    use_pallas: bool = True,
+    exact_d1=None,
+    extrapolate: bool = False,
+):
+    """Differentiable unary ``f(x)`` served from the SHARDED pack.
+
+    Mirrors :func:`make_pack_fn`; the forward picks its execution at trace
+    time: under an active ``use_sharding`` binding whose 'model' axis is
+    ``pack.n_shards`` wide it runs shard_map + psum (each device holds one
+    values slice), otherwise it sums the stacked shard contributions on one
+    device.  Both are bit-identical to the replicated pack.
+    """
+    fid = pack.fn_id(name)
+
+    def fwd_impl(v):
+        mesh = _active_pack_mesh(pack)
+        if mesh is not None:
+            return eval_sharded_mesh(pack, fid, v, mesh,
+                                     extrapolate=extrapolate,
+                                     use_pallas=use_pallas)
+        if use_pallas:
+            from repro.kernels.table_pack_lookup import sharded_pack_lookup_pallas
+
+            return sharded_pack_lookup_pallas(pack, fid, v,
+                                              extrapolate=extrapolate)
+        return eval_sharded_ref(pack, fid, v, extrapolate=extrapolate)
+
+    def slope_impl(v):
+        mesh = _active_pack_mesh(pack)
+        if mesh is not None:
+            return eval_sharded_mesh(pack, fid, v, mesh,
+                                     extrapolate=extrapolate,
+                                     use_pallas=use_pallas, slope=True)
+        if use_pallas:
+            from repro.kernels.table_pack_lookup import sharded_pack_slope_pallas
+
+            return sharded_pack_slope_pallas(pack, fid, v,
+                                             extrapolate=extrapolate)
+        return eval_sharded_slope(pack, fid, v, extrapolate=extrapolate)
+
+    @jax.custom_jvp
+    def f(x):
+        return fwd_impl(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        if exact_d1 is not None:
+            y = fwd_impl(x)
+            slope = exact_d1(x)
+        elif use_pallas and _active_pack_mesh(pack) is None:
+            # off-mesh training path: fused (value, slope) in one selector pass
+            from repro.kernels.table_pack_lookup import sharded_pack_grad_pallas
+
+            y, slope = sharded_pack_grad_pallas(pack, fid, x,
+                                                extrapolate=extrapolate)
+        else:
+            y = fwd_impl(x)
+            slope = slope_impl(x)
+        return y, slope * dx
+
+    return f
+
+
+# --------------------------------------------------------------------------------------
 # RoutedPack — per-row DYNAMIC fn_id dispatch (one executable, mixed-function batches).
 # --------------------------------------------------------------------------------------
 #
@@ -569,6 +887,23 @@ def eval_routed_quant_slope(pack: QuantTablePack, fn_ids, x: jax.Array, *,
         extrapolate)
 
 
+def eval_routed_sharded_ref(pack: ShardedTablePack, fn_ids, x: jax.Array, *,
+                            extrapolate=False) -> jax.Array:
+    """Routed oracle over the SHARDED pack: row i through member ``fn_ids[i]``
+    with each member's value summed from its shard contributions."""
+    return _routed_where(
+        pack, fn_ids, x,
+        lambda f, e: eval_sharded_ref(pack, f, x, extrapolate=e), extrapolate)
+
+
+def eval_routed_sharded_slope(pack: ShardedTablePack, fn_ids, x: jax.Array, *,
+                              extrapolate=False) -> jax.Array:
+    """d/dx of the routed sharded surrogate."""
+    return _routed_where(
+        pack, fn_ids, x,
+        lambda f, e: eval_sharded_slope(pack, f, x, extrapolate=e), extrapolate)
+
+
 def make_routed_fn(
     pack,
     fn_ids,
@@ -588,20 +923,30 @@ def make_routed_fn(
     value pass in the Pallas path.
     """
     quant = isinstance(pack, QuantTablePack)
+    sharded = isinstance(pack, ShardedTablePack)
     if use_pallas:
         from repro.kernels.routed_pack_lookup import (
             routed_pack_grad_pallas, routed_pack_lookup_pallas,
-            routed_quant_pack_grad_pallas, routed_quant_pack_lookup_pallas)
+            routed_quant_pack_grad_pallas, routed_quant_pack_lookup_pallas,
+            sharded_routed_pack_grad_pallas, sharded_routed_pack_lookup_pallas)
 
-        lookup = routed_quant_pack_lookup_pallas if quant else \
-            routed_pack_lookup_pallas
-        gradk = routed_quant_pack_grad_pallas if quant else \
-            routed_pack_grad_pallas
+        if sharded:
+            lookup, gradk = (sharded_routed_pack_lookup_pallas,
+                             sharded_routed_pack_grad_pallas)
+        elif quant:
+            lookup, gradk = (routed_quant_pack_lookup_pallas,
+                             routed_quant_pack_grad_pallas)
+        else:
+            lookup, gradk = routed_pack_lookup_pallas, routed_pack_grad_pallas
         fwd_impl = lambda v: lookup(pack, fn_ids, v, extrapolate=extrapolate)
         fused_grad = lambda v: gradk(pack, fn_ids, v, extrapolate=extrapolate)
     else:
-        ref = eval_routed_quant_ref if quant else eval_routed_ref
-        slope_ref = eval_routed_quant_slope if quant else eval_routed_slope
+        if sharded:
+            ref, slope_ref = eval_routed_sharded_ref, eval_routed_sharded_slope
+        elif quant:
+            ref, slope_ref = eval_routed_quant_ref, eval_routed_quant_slope
+        else:
+            ref, slope_ref = eval_routed_ref, eval_routed_slope
         fwd_impl = lambda v: ref(pack, fn_ids, v, extrapolate=extrapolate)
         fused_grad = None
 

@@ -15,7 +15,14 @@ from .splitting import (
 from .table import TableSpec, build_table
 from .flow import FlowReport, cached_table, run_flow
 from .bram import bram_count, bram_count_packed, vmem_cost, vmem_cost_pack
-from .packing import PackLayout, QuantPackLayout, pack_layout, quant_pack_layout
+from .packing import (
+    PackLayout,
+    QuantPackLayout,
+    ShardedPackLayout,
+    pack_layout,
+    quant_pack_layout,
+    shard_pack_layout,
+)
 from .quantize import (
     FixedPointFormat,
     PAPER_FORMATS,
@@ -39,6 +46,7 @@ __all__ = [
     "QuantMember",
     "QuantPackLayout",
     "SecondDerivMax",
+    "ShardedPackLayout",
     "SplitResult",
     "TTestResult",
     "TableSpec",
@@ -62,6 +70,7 @@ __all__ = [
     "reference_spacing",
     "run_flow",
     "sequential_split",
+    "shard_pack_layout",
     "split",
     "t_cdf",
     "ttest2",

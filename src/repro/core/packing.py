@@ -307,6 +307,129 @@ def quant_pack_layout(members: Sequence[QuantMember]) -> QuantPackLayout:
     )
 
 
+# --------------------------------------------------------------------------------------
+# ShardedPack layout — the pack's values vector partitioned across a mesh axis.
+# --------------------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardedPackLayout:
+    """A :class:`PackLayout` whose ``values`` vector is partitioned over
+    ``n_shards`` mesh shards at SUB-INTERVAL granularity.
+
+    The paper instantiates one BRAM per table because the table must sit next
+    to its consumer; once the multi-function pack outgrows a single core's
+    VMEM, the same locality argument runs in reverse — each core should hold
+    only a SLICE of the values vector.  Sub-intervals are the natural cut
+    granularity: each sub-interval ``(f, j)`` owns a contiguous
+    ``seg_count + 1``-entry run of ``values`` (runs never share endpoint
+    entries — see ``build_table``), so a shard owning whole sub-intervals owns
+    a contiguous slice and every adjacent-pair gather ``(a, a+1)`` stays
+    shard-local.
+
+      * ``owner``       (F, n_max)  which shard answers sub-interval (f, j);
+        padding columns are owned by no shard (-1);
+      * ``local_base``  (F, n_max)  the pack's GLOBAL ``base`` rebased into
+        the owner's slice: ``local_base = base - shard_offsets[owner]``
+        (0 where unowned — reads there are masked, never trusted);
+      * ``shard_offsets`` (S,)      first global values index of each shard;
+      * ``shard_sizes``   (S,)      real (unpadded) entries per shard.
+
+    The selector metadata (boundaries / inv_delta / seg_count) stays
+    REPLICATED — it is the small part (a few KB) and every shard must run the
+    full comparator plane to know whether it owns the selected sub-interval.
+    Only the values payload (the big part) is partitioned.
+    """
+
+    layout: PackLayout
+    n_shards: int
+    owner: np.ndarray  # (F, n_max) i64, -1 on padding columns
+    local_base: np.ndarray  # (F, n_max) i64 — rebased into the owner's slice
+    shard_offsets: np.ndarray  # (S,) i64
+    shard_sizes: np.ndarray  # (S,) i64
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return self.layout.names
+
+    @property
+    def n_intervals(self) -> Tuple[int, ...]:
+        return self.layout.n_intervals
+
+    @property
+    def footprint(self) -> int:
+        return self.layout.footprint
+
+    @property
+    def max_shard_entries(self) -> int:
+        """Per-shard values high-water: shards are padded to the largest slice
+        so they stack into one (S, m_max) runtime operand."""
+        return max(1, int(self.shard_sizes.max()))
+
+    def shard_values(self, s: int) -> np.ndarray:
+        """Shard ``s``'s slice of the packed values (unpadded)."""
+        o = int(self.shard_offsets[s])
+        return self.layout.values[o : o + int(self.shard_sizes[s])]
+
+    def vmem(self, shard: Optional[int] = None, dtype_bytes: int = 4,
+             budget_bytes: int = bram.VMEM_BYTES_V5E) -> bram.VmemCost:
+        """Per-shard VMEM residency (``shard=None`` -> the high-water shard).
+
+        Counts what the sharded runtime actually pins on one core: the PADDED
+        values slice (``max_shard_entries`` — every shard holds the same
+        operand shape) plus the replicated selector metadata (boundaries,
+        inv_delta, seg_count) and the two per-shard planes (local_base,
+        owned mask), all f32.  Compare against ``layout.vmem()`` — the
+        replicated baseline this sharding exists to beat.
+        """
+        del shard  # padding makes every shard's residency the high-water one
+        F = self.layout.n_functions
+        n_max = self.layout.n_max
+        table = self.max_shard_entries * dtype_bytes
+        meta = F * (5 * n_max + 1) * 4  # 3 replicated lanes + 2 shard planes
+        pad = bram.VMEM_SUBLANE_BYTES
+        padded = math.ceil((table + meta) / pad) * pad
+        return bram.VmemCost(table, meta, padded, budget_bytes)
+
+
+def shard_pack_layout(layout: PackLayout, n_shards: int) -> ShardedPackLayout:
+    """Partition a pack's values vector into ``n_shards`` contiguous slices.
+
+    Sub-intervals are assigned to shards in pack order by their starting
+    entry: sub-interval runs are never split (the adjacent-pair gather must
+    stay shard-local), so the planner cuts the ``sum_f M_f`` entry span at the
+    run boundaries nearest the ideal ``footprint / n_shards`` marks.  The
+    resulting slices partition ``values`` exactly; ``base`` is rebased per
+    shard so each slice is self-addressing from zero.
+    """
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    if n_shards > layout.footprint:
+        raise ValueError(
+            f"cannot split {layout.footprint} entries into {n_shards} shards")
+    F, n_max = layout.n_functions, layout.n_max
+    total = layout.footprint
+    owner = np.full((F, n_max), -1, dtype=np.int64)
+    sizes = np.zeros((n_shards,), dtype=np.int64)
+    for f in range(F):
+        for j in range(layout.n_intervals[f]):
+            start = int(layout.base[f, j])
+            s = min(n_shards - 1, start * n_shards // total)
+            owner[f, j] = s
+            sizes[s] += int(layout.seg_count[f, j]) + 1
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
+    local_base = np.where(owner >= 0,
+                          layout.base - offsets[np.maximum(owner, 0)], 0)
+    return ShardedPackLayout(
+        layout=layout,
+        n_shards=n_shards,
+        owner=owner,
+        local_base=local_base.astype(np.int64),
+        shard_offsets=offsets,
+        shard_sizes=sizes,
+    )
+
+
 @dataclass(frozen=True)
 class QuantizedTableSpec:
     """A TableSpec whose values are stored affinely quantized per sub-interval."""

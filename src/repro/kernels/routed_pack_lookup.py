@@ -42,8 +42,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.approx.table_pack import (QuantTablePack, TablePack,
-                                     resolve_fn_ids, routed_extr_flags)
+from repro.approx.table_pack import (QuantTablePack, ShardedTablePack,
+                                     TablePack, resolve_fn_ids,
+                                     routed_extr_flags)
 
 DEFAULT_BLOCK_COLS = 65536  # (1, 65536) f32 tile = 256 KiB in + 256 KiB out
 
@@ -151,13 +152,15 @@ def _routed_grad_kernel(ids_ref, n_ref, extr_ref, x_ref, bounds_ref, invd_ref,
 
 def _routed_grid_spec(x2d, n_max: int, values_shape, block_cols: int,
                       n_outs: int, num_scalars: int, pinned_meta: bool,
-                      extra_pinned=()):
-    """PrefetchScalarGridSpec shared by the four routed entry points.
+                      extra_pinned=(), n_meta_rows: int = 3):
+    """PrefetchScalarGridSpec shared by the routed entry points.
 
-    ``pinned_meta=False`` (f32 pack): the four metadata planes are streamed
-    per grid row with ``fn_ids[i]`` as the DMA row index.  ``pinned_meta=True``
-    (quant pack): the ragged flat lanes stay whole-resident and the kernel
-    indexes them with prefetched offsets.
+    ``pinned_meta=False`` (f32 pack): the metadata planes — the boundary row
+    plus ``n_meta_rows`` (F, n_max) planes (3 for the replicated pack, 4 for
+    the sharded pack, which adds the ownership plane) — are streamed per grid
+    row with ``fn_ids[i]`` as the DMA row index.  ``pinned_meta=True`` (quant
+    pack): the ragged flat lanes stay whole-resident and the kernel indexes
+    them with prefetched offsets.
     """
     rows, cpad = x2d.shape
 
@@ -175,7 +178,7 @@ def _routed_grid_spec(x2d, n_max: int, values_shape, block_cols: int,
         in_specs = [x_spec] + [pl.BlockSpec(s, pin_map) for s in extra_pinned]
     else:
         in_specs = ([x_spec, pl.BlockSpec((1, n_max + 1), fid_map)] +
-                    [pl.BlockSpec((1, n_max), fid_map)] * 3 +
+                    [pl.BlockSpec((1, n_max), fid_map)] * n_meta_rows +
                     [pl.BlockSpec(values_shape, pin_map)])
     out_spec = pl.BlockSpec((1, block_cols), row_map)
     return pltpu.PrefetchScalarGridSpec(
@@ -429,3 +432,143 @@ def routed_quant_pack_grad_pallas(
         ids, n_arr, extr, bo_arr, lo_arr, bits_arr, x2d, *operands,
         block_cols=block, interpret=interpret, n_max=n_max, grad=True)
     return _untile_rows(y2d, c, x.shape), _untile_rows(dy2d, c, x.shape)
+
+
+# --------------------------------------------------------------------------------------
+# ShardedTablePack: routed dispatch over ONE shard's values slice, unowned masked.
+# --------------------------------------------------------------------------------------
+#
+# Same scalar-prefetch dispatch as the f32 routed kernels — fn_ids steer the
+# metadata-row DMA — but the values operand is one SHARD's padded slice, the
+# base plane holds shard-local rebased addresses, and a fourth streamed plane
+# (the ownership mask, gathered at the selected sub-interval like the other
+# parameters) zeroes rows of elements the shard does not own.  Per-shard
+# outputs sum to the replicated routed result bit for bit (one owner + zeros),
+# so ONE executable still serves every routing — per shard.
+
+
+def _sharded_routed_kernel(ids_ref, n_ref, extr_ref, x_ref, bounds_ref,
+                           invd_ref, lbase_ref, segs_ref, own_ref, values_ref,
+                           o_ref):
+    r = pl.program_id(0)
+    fid = ids_ref[r]
+    nf = n_ref[fid]
+    extr = extr_ref[fid]
+    x = x_ref[...].astype(jnp.float32)
+
+    ju, p, invd, base, segs = _routed_select(
+        x, bounds_ref[0, :], invd_ref[0, :], lbase_ref[0, :], segs_ref[0, :],
+        nf)
+    j = jnp.minimum(ju, nf - 1)
+    own = jnp.take(own_ref[0, :], j, axis=0, mode="clip")
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)  # SHARD-LOCAL (rebased at plan time)
+
+    values = values_ref[0, :]
+    y0 = jnp.take(values, a, axis=0, mode="clip")
+    y1 = jnp.take(values, a + 1, axis=0, mode="clip")
+
+    t = u - i
+    t = jnp.where(extr > 0, t, jnp.clip(t, 0.0, 1.0))
+    y = y0 + t * (y1 - y0)
+    o_ref[...] = jnp.where(own > 0, y, 0.0).astype(o_ref.dtype)
+
+
+def _sharded_routed_grad_kernel(ids_ref, n_ref, extr_ref, x_ref, bounds_ref,
+                                invd_ref, lbase_ref, segs_ref, own_ref,
+                                values_ref, y_ref, dy_ref):
+    r = pl.program_id(0)
+    fid = ids_ref[r]
+    nf = n_ref[fid]
+    extr = extr_ref[fid]
+    x = x_ref[...].astype(jnp.float32)
+
+    brow = bounds_ref[0, :]
+    ju, p, invd, base, segs = _routed_select(
+        x, brow, invd_ref[0, :], lbase_ref[0, :], segs_ref[0, :], nf)
+    j = jnp.minimum(ju, nf - 1)
+    own = jnp.take(own_ref[0, :], j, axis=0, mode="clip")
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    values = values_ref[0, :]
+    y0 = jnp.take(values, a, axis=0, mode="clip")
+    y1 = jnp.take(values, a + 1, axis=0, mode="clip")
+
+    t = u - i
+    slope = (y1 - y0) * invd
+    inside = ((x >= brow[0]) & (ju < nf)).astype(jnp.float32)
+    t = jnp.where(extr > 0, t, jnp.clip(t, 0.0, 1.0))
+    slope = jnp.where(extr > 0, slope, slope * inside)
+    y_ref[...] = jnp.where(own > 0, y0 + t * (y1 - y0), 0.0).astype(y_ref.dtype)
+    dy_ref[...] = jnp.where(own > 0, slope, 0.0).astype(dy_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols", "interpret",
+                                             "n_max", "grad"))
+def _sharded_routed_call(ids, n_arr, extr_arr, x2d, bounds, invd, lbase, segs,
+                         own, values, *, block_cols, interpret, n_max, grad):
+    n_outs = 2 if grad else 1
+    grid_spec = _routed_grid_spec(x2d, n_max, values.shape, block_cols,
+                                  n_outs, num_scalars=3, pinned_meta=False,
+                                  n_meta_rows=4)
+    kernel = _sharded_routed_grad_kernel if grad else _sharded_routed_kernel
+    out_shape = jax.ShapeDtypeStruct(x2d.shape, x2d.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape if not grad else [out_shape] * 2,
+        interpret=interpret,
+    )(ids, n_arr, extr_arr, x2d, bounds, invd, lbase, segs, own, values)
+
+
+def _sharded_routed_sum(pack: ShardedTablePack, fn_ids, x, extrapolate,
+                        block_cols, interpret, grad: bool):
+    x2d, block, c, ids, extr, interpret = _routed_prep(
+        pack, fn_ids, x, extrapolate, block_cols, interpret)
+    (n_arr,) = pack.routing_scalars()
+    n_arr = jnp.asarray(n_arr)
+    outs = None
+    for s in range(pack.n_shards):
+        o = _sharded_routed_call(
+            ids, n_arr, extr, x2d, pack.boundaries, pack.inv_delta,
+            pack.local_base[s], pack.seg_count, pack.owned[s],
+            pack.values[s].reshape(1, -1),
+            block_cols=block, interpret=interpret, n_max=pack.n_max, grad=grad)
+        if not grad:
+            o = (o,)
+        outs = o if outs is None else tuple(a + b for a, b in zip(outs, o))
+    return tuple(_untile_rows(o, c, x.shape) for o in outs)
+
+
+def sharded_routed_pack_lookup_pallas(
+    pack: ShardedTablePack,
+    fn_ids,
+    x: jax.Array,
+    *,
+    extrapolate=False,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Row i of ``x`` through member ``fn_ids[i]`` of the SHARDED pack — one
+    routed executable per shard, contributions summed (off-mesh path)."""
+    (y,) = _sharded_routed_sum(pack, fn_ids, x, extrapolate, block_cols,
+                               interpret, grad=False)
+    return y
+
+
+def sharded_routed_pack_grad_pallas(
+    pack: ShardedTablePack,
+    fn_ids,
+    x: jax.Array,
+    *,
+    extrapolate=False,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+    interpret: bool | None = None,
+):
+    """Routed sharded (y, dy/dx) — per-shard fused passes, summed."""
+    return _sharded_routed_sum(pack, fn_ids, x, extrapolate, block_cols,
+                               interpret, grad=True)

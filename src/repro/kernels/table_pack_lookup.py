@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.approx.table_pack import QuantTablePack, TablePack
+from repro.approx.table_pack import (QuantTablePack, ShardedTablePack,
+                                     TablePack)
 
 from .table_lookup import (DEFAULT_BLOCK_ROWS, LANE, _pinned, select_interval,
                            select_params, tile_activations, untile_activations)
@@ -360,5 +361,237 @@ def table_pack_grad_pallas(
         block_rows=block, interpret=interpret, fn_id=fid,
         n_intervals=pack.n_intervals[fid], extrapolate=extrapolate,
     )
+    return (untile_activations(y2d, n, x.shape),
+            untile_activations(dy2d, n, x.shape))
+
+
+# --------------------------------------------------------------------------------------
+# ShardedPack kernels — one shard's values slice VMEM-resident, unowned rows masked.
+# --------------------------------------------------------------------------------------
+#
+# The replicated kernels above pin the WHOLE values vector; the sharded kernel
+# pins one shard's padded slice plus the (small, replicated) selector metadata
+# and the shard's (local_base, owned) planes.  The body is the static pack
+# body with two changes: the base gather reads the SHARD-LOCAL rebased
+# address, and the output is masked to the sub-intervals this shard owns.
+# Contributions combine OUTSIDE the kernel — a psum over the mesh 'model'
+# axis under shard_map, or a stacked-axis sum off-mesh — adding one owner
+# value and S-1 zeros, so the summed result is bit-identical to the
+# replicated kernel (asserted in tests/test_sharded_pack.py and the
+# conformance matrix).
+
+
+def _spack_kernel(x_ref, bounds_ref, invd_ref, segs_ref, lbase_ref, own_ref,
+                  values_ref, o_ref, *, fn_id: int, n_intervals: int,
+                  extrapolate: bool, slope: bool):
+    x = x_ref[...].astype(jnp.float32)
+
+    brow = bounds_ref[fn_id, :]
+    j = select_interval(brow, n_intervals, x)
+    p = jnp.take(brow, j, axis=0, mode="clip")
+    invd = jnp.take(invd_ref[fn_id, :], j, axis=0, mode="clip")
+    segs = jnp.take(segs_ref[fn_id, :], j, axis=0, mode="clip")
+    base = jnp.take(lbase_ref[fn_id, :], j, axis=0, mode="clip")
+    own = jnp.take(own_ref[fn_id, :], j, axis=0, mode="clip")
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)  # SHARD-LOCAL address (rebased at plan time)
+
+    values = values_ref[0, :]
+    y0 = jnp.take(values, a, axis=0, mode="clip")
+    y1 = jnp.take(values, a + 1, axis=0, mode="clip")
+
+    if slope:
+        out = (y1 - y0) * invd
+        if not extrapolate:
+            inside = ((x >= brow[0]) & (x < brow[n_intervals]))
+            out = out * inside.astype(jnp.float32)
+    else:
+        t = u - i
+        if not extrapolate:
+            t = jnp.clip(t, 0.0, 1.0)
+        out = y0 + t * (y1 - y0)
+    o_ref[...] = jnp.where(own > 0, out, 0.0).astype(o_ref.dtype)
+
+
+def _spack_grad_kernel(x_ref, bounds_ref, invd_ref, segs_ref, lbase_ref,
+                       own_ref, values_ref, y_ref, dy_ref, *, fn_id: int,
+                       n_intervals: int, extrapolate: bool):
+    """Fused (value, slope) shard contribution in ONE selector pass — the
+    sharded twin of ``_pack_grad_kernel`` (same ops, masked outputs)."""
+    x = x_ref[...].astype(jnp.float32)
+
+    brow = bounds_ref[fn_id, :]
+    j = select_interval(brow, n_intervals, x)
+    p = jnp.take(brow, j, axis=0, mode="clip")
+    invd = jnp.take(invd_ref[fn_id, :], j, axis=0, mode="clip")
+    segs = jnp.take(segs_ref[fn_id, :], j, axis=0, mode="clip")
+    base = jnp.take(lbase_ref[fn_id, :], j, axis=0, mode="clip")
+    own = jnp.take(own_ref[fn_id, :], j, axis=0, mode="clip")
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    values = values_ref[0, :]
+    y0 = jnp.take(values, a, axis=0, mode="clip")
+    y1 = jnp.take(values, a + 1, axis=0, mode="clip")
+
+    t = u - i
+    slope = (y1 - y0) * invd
+    if not extrapolate:
+        t = jnp.clip(t, 0.0, 1.0)
+        inside = ((x >= brow[0]) &
+                  (x < brow[n_intervals])).astype(jnp.float32)
+        slope = slope * inside
+    y_ref[...] = jnp.where(own > 0, y0 + t * (y1 - y0), 0.0).astype(y_ref.dtype)
+    dy_ref[...] = jnp.where(own > 0, slope, 0.0).astype(dy_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "fn_id", "n_intervals",
+                              "extrapolate", "slope"))
+def _sharded_call(x2d, bounds, invd, segs, lbase, own, values, *, block_rows,
+                  interpret, fn_id, n_intervals, extrapolate, slope):
+    grid, in_specs = _pack_specs(x2d, (bounds, invd, segs, lbase, own, values),
+                                 block_rows)
+    kernel = functools.partial(_spack_kernel, fn_id=fn_id,
+                               n_intervals=n_intervals, extrapolate=extrapolate,
+                               slope=slope)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_rows, x2d.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, bounds, invd, segs, lbase, own, values)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "fn_id", "n_intervals",
+                              "extrapolate"))
+def _sharded_call_grad(x2d, bounds, invd, segs, lbase, own, values, *,
+                       block_rows, interpret, fn_id, n_intervals, extrapolate):
+    grid, in_specs = _pack_specs(x2d, (bounds, invd, segs, lbase, own, values),
+                                 block_rows)
+    kernel = functools.partial(_spack_grad_kernel, fn_id=fn_id,
+                               n_intervals=n_intervals, extrapolate=extrapolate)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((block_rows, x2d.shape[1]), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct(x2d.shape, x2d.dtype)] * 2,
+        interpret=interpret,
+    )(x2d, bounds, invd, segs, lbase, own, values)
+
+
+def sharded_shard_contrib_pallas(
+    boundaries: jax.Array,
+    inv_delta: jax.Array,
+    seg_count: jax.Array,
+    local_base: jax.Array,
+    owned: jax.Array,
+    values_s: jax.Array,
+    x: jax.Array,
+    *,
+    fn_id: int,
+    n_intervals: int,
+    extrapolate: bool = False,
+    slope: bool = False,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """ONE shard's masked contribution from explicit (mesh-local) arrays.
+
+    This is the entry the shard_map body calls: ``local_base``/``owned`` are
+    the (F, n_max) planes of the CALLING shard and ``values_s`` its (m_max,)
+    slice.  The caller combines contributions (psum on mesh, sum off-mesh).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x2d, block, n = tile_activations(x, lane, block_rows)
+    out = _sharded_call(
+        x2d, boundaries, inv_delta, seg_count, local_base, owned,
+        values_s.reshape(1, -1),
+        block_rows=block, interpret=interpret, fn_id=fn_id,
+        n_intervals=n_intervals, extrapolate=extrapolate, slope=slope)
+    return untile_activations(out, n, x.shape)
+
+
+def _sharded_sum_pallas(pack: ShardedTablePack, fn, x, extrapolate, slope,
+                        block_rows, lane, interpret):
+    fid = pack.member_id(fn)
+    out = None
+    for s in range(pack.n_shards):
+        c = sharded_shard_contrib_pallas(
+            pack.boundaries, pack.inv_delta, pack.seg_count,
+            pack.local_base[s], pack.owned[s], pack.values[s], x,
+            fn_id=fid, n_intervals=pack.n_intervals[fid],
+            extrapolate=extrapolate, slope=slope, block_rows=block_rows,
+            lane=lane, interpret=interpret)
+        out = c if out is None else out + c
+    return out
+
+
+def sharded_pack_lookup_pallas(
+    pack: ShardedTablePack,
+    fn,
+    x: jax.Array,
+    *,
+    extrapolate: bool = False,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Evaluate member ``fn`` of the sharded pack (stacked shard axis: one
+    kernel launch per shard, contributions summed — the off-mesh path)."""
+    return _sharded_sum_pallas(pack, fn, x, extrapolate, False, block_rows,
+                               lane, interpret)
+
+
+def sharded_pack_slope_pallas(
+    pack: ShardedTablePack,
+    fn,
+    x: jax.Array,
+    *,
+    extrapolate: bool = False,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Slope only (no value pass) — bit-identical to ``eval_sharded_slope``."""
+    return _sharded_sum_pallas(pack, fn, x, extrapolate, True, block_rows,
+                               lane, interpret)
+
+
+def sharded_pack_grad_pallas(
+    pack: ShardedTablePack,
+    fn,
+    x: jax.Array,
+    *,
+    extrapolate: bool = False,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+):
+    """Returns (y, dy/dx) from the sharded pack — one FUSED selector pass per
+    shard (S launches total, like the replicated ``table_pack_grad_pallas``'s
+    single fused launch)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fid = pack.member_id(fn)
+    x2d, block, n = tile_activations(x, lane, block_rows)
+    y2d = dy2d = None
+    for s in range(pack.n_shards):
+        cy, cdy = _sharded_call_grad(
+            x2d, pack.boundaries, pack.inv_delta, pack.seg_count,
+            pack.local_base[s], pack.owned[s], pack.values[s].reshape(1, -1),
+            block_rows=block, interpret=interpret, fn_id=fid,
+            n_intervals=pack.n_intervals[fid], extrapolate=extrapolate)
+        y2d = cy if y2d is None else y2d + cy
+        dy2d = cdy if dy2d is None else dy2d + cdy
     return (untile_activations(y2d, n, x.shape),
             untile_activations(dy2d, n, x.shape))

@@ -21,3 +21,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh for CPU smoke runs (requires enough host devices)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_sharded_pack_mesh(n_shards: int, n_data: int = 1):
+    """Debug mesh whose 'model' axis width matches a ShardedPack's shard count.
+
+    ``ApproxConfig(mode="sharded_pack", pack_shards=N)`` distributes only when
+    the bound mesh's 'model' axis is exactly N wide (see
+    ``approx.table_pack._active_pack_mesh``); this helper builds that mesh for
+    CPU smoke runs (``XLA_FLAGS=--xla_force_host_platform_device_count=...``
+    must provide n_data * n_shards host devices before the first jax import).
+    """
+    return jax.make_mesh((n_data, n_shards), ("data", "model"))

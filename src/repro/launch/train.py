@@ -49,9 +49,15 @@ def main():
                          "quant_pack = the same pack with int8/int16 entries "
                          "dequantized on read, routed_* = the same packs with "
                          "dynamic per-row fn_id dispatch (one executable for "
-                         "every member)")
+                         "every member), sharded_pack = the pack's values "
+                         "split over the mesh 'model' axis (per-shard base "
+                         "rebasing, psum combine)")
     ap.add_argument("--approx-ea", type=float, default=None,
                     help="override the config's error budget E_a")
+    ap.add_argument("--pack-shards", type=int, default=None,
+                    help="sharded_pack modes: split the pack values this many "
+                         "ways (distributes when a mesh binds a matching "
+                         "'model' axis; otherwise a stacked-shard sum)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -61,7 +67,8 @@ def main():
         sys.path.insert(0, os.path.join(os.path.dirname(__file__),
                                         "..", "..", ".."))
         cfg = reduced_config(cfg)
-    if args.approx_mode is not None or args.approx_ea is not None:
+    if (args.approx_mode is not None or args.approx_ea is not None
+            or args.pack_shards is not None):
         import dataclasses
 
         # override only what was passed; keep the config's other approx params
@@ -70,6 +77,8 @@ def main():
             kw["mode"] = args.approx_mode
         if args.approx_ea is not None:
             kw["e_a"] = args.approx_ea
+        if args.pack_shards is not None:
+            kw["pack_shards"] = args.pack_shards
         cfg = cfg.replace(approx=dataclasses.replace(cfg.approx, **kw))
     model = build_model(cfg)
 

@@ -68,3 +68,52 @@ def shard_activation(x: jax.Array, *logical) -> jax.Array:
     mesh, rules = b
     spec = P(*(rules.get(l) if l is not None else None for l in logical))
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------- ShardedTablePack operand rules -------------------------------
+#
+# The sharded pack stacks one values slice (and one local_base/owned plane
+# pair) per shard on a leading axis that lays over the mesh 'model' axis;
+# the selector metadata is replicated.  These specs are what makes the VMEM
+# story real: device_put with them and each core holds ONE slice, not S.
+
+
+def sharded_pack_pspecs(mesh: Mesh):
+    """PartitionSpecs for every :class:`repro.approx.ShardedTablePack` leaf.
+
+    The leading (shard) axis of ``local_base`` / ``owned`` / ``values`` maps
+    to 'model'; ``boundaries`` / ``inv_delta`` / ``seg_count`` replicate.
+    Returns a dict keyed by field name (static fields carry no spec).
+    """
+    model = "model" if "model" in mesh.axis_names else None
+    return {
+        "boundaries": P(None, None),
+        "inv_delta": P(None, None),
+        "seg_count": P(None, None),
+        "local_base": P(model, None, None),
+        "owned": P(model, None, None),
+        "values": P(model, None),
+    }
+
+
+def place_sharded_pack(pack, mesh: Mesh):
+    """device_put a ShardedTablePack so each 'model' shard holds one slice.
+
+    Requires ``mesh.shape['model'] == pack.n_shards``.  The returned pack is
+    what the shard_map lookup path (``eval_sharded_mesh``) consumes without
+    any resharding transfer.
+    """
+    if "model" not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no 'model' axis")
+    if mesh.shape["model"] != pack.n_shards:
+        raise ValueError(
+            f"mesh 'model' axis is {mesh.shape['model']} wide but the pack "
+            f"has {pack.n_shards} shards")
+    specs = sharded_pack_pspecs(mesh)
+    kw = {
+        name: (jax.device_put(getattr(pack, name),
+                              NamedSharding(mesh, specs[name]))
+               if name in specs else getattr(pack, name))
+        for name in pack._fields
+    }
+    return type(pack)(**kw)

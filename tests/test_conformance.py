@@ -23,17 +23,31 @@ from repro.approx.table_pack import (
     eval_quant_pack_ref,
     eval_routed_quant_ref,
     eval_routed_ref,
+    eval_sharded_ref,
     make_pack_fn,
     make_quant_pack_fn,
     make_routed_unary_fn,
+    make_sharded_pack_fn,
+    shard_pack,
 )
-from repro.core import cached_table, function_names, get_function, plan_quant_member, quant_pack_layout
+from repro.core import (
+    cached_table,
+    function_names,
+    get_function,
+    pack_layout,
+    plan_quant_member,
+    quant_pack_layout,
+)
 from repro.kernels.routed_pack_lookup import (
     routed_pack_lookup_pallas,
     routed_quant_pack_lookup_pallas,
 )
 from repro.kernels.table_lookup import table_lookup_pallas
-from repro.kernels.table_pack_lookup import quant_pack_lookup_pallas, table_pack_lookup_pallas
+from repro.kernels.table_pack_lookup import (
+    quant_pack_lookup_pallas,
+    sharded_pack_lookup_pallas,
+    table_pack_lookup_pallas,
+)
 
 EA = 1e-4
 
@@ -45,7 +59,9 @@ KERNEL_ORACLE = {
     "quant_pack": "quant_pack_ref",
     "routed_pack": "routed_pack_ref",
     "routed_quant_pack": "routed_quant_pack_ref",
+    "sharded_pack": "sharded_pack_ref",
 }
+N_SHARDS = 2  # sharded modes: shard count for the conformance pack
 FUNCS = tuple(function_names())
 # the fast-tier subsample: one easy, one flat-asymptote, one log-domain member
 FAST_FUNCS = ("gelu", "tanh", "log")
@@ -71,6 +87,13 @@ def _qpack():
         _CACHE["qpack"] = from_quant_layout(quant_pack_layout(
             [plan_quant_member(n, EA) for n in FUNCS]))
     return _CACHE["qpack"]
+
+
+def _spack():
+    if "spack" not in _CACHE:
+        _CACHE["spack"] = shard_pack(
+            pack_layout([_spec(n) for n in FUNCS]), N_SHARDS)
+    return _CACHE["spack"]
 
 
 def _rows(x):
@@ -104,6 +127,10 @@ def approx_eval(mode: str, name: str, x: jnp.ndarray) -> np.ndarray:
     elif mode == "routed_quant_pack":
         out = routed_quant_pack_lookup_pallas(_qpack(), name,
                                               _rows(x)).reshape(x.shape)
+    elif mode == "sharded_pack_ref":
+        out = jax.jit(lambda v: eval_sharded_ref(_spack(), name, v))(x)
+    elif mode == "sharded_pack":
+        out = sharded_pack_lookup_pallas(_spack(), name, x)
     else:  # pragma: no cover - the completeness test keeps this unreachable
         raise ValueError(mode)
     return np.asarray(out, dtype=np.float64)
@@ -118,6 +145,8 @@ def approx_fn(mode: str, name: str):
     if mode.startswith("routed"):
         pack = _qpack() if "quant" in mode else _pack()
         return make_routed_unary_fn(pack, name, use_pallas=pallas)
+    if mode.startswith("sharded"):
+        return make_sharded_pack_fn(_spack(), name, use_pallas=pallas)
     if mode.startswith("quant"):
         return make_quant_pack_fn(_qpack(), name, use_pallas=pallas)
     return make_pack_fn(_pack(), name, use_pallas=pallas)

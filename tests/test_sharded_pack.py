@@ -1,0 +1,318 @@
+"""ShardedPack: planner invariants, bit-parity with the replicated pack, and
+the distributed (shard_map + psum) path on a multi-device debug mesh.
+
+The sharding contract (docs/sharding.md): the shard planner partitions the
+pack's values vector at sub-interval granularity into contiguous per-shard
+slices with rebased base addresses; the shard-local lookup masks elements
+whose selected sub-interval the shard does not own; summing the S
+contributions (psum over 'model' on a mesh, a stacked-axis sum off-mesh)
+reproduces the REPLICATED pack bit for bit — exactly one shard contributes a
+real value per element, the rest contribute literal zeros.
+
+Mesh tests run in subprocesses (device count locks at first jax init, same
+pattern as tests/test_parallel.py).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx import ApproxConfig, pack_specs
+from repro.approx.table_pack import (
+    eval_pack_ref,
+    eval_pack_slope,
+    eval_routed_ref,
+    eval_routed_sharded_ref,
+    eval_sharded_ref,
+    eval_sharded_slope,
+    from_sharded_layout,
+)
+from repro.core import cached_table, function_names, get_function, pack_layout, shard_pack_layout
+from repro.kernels.routed_pack_lookup import (
+    routed_pack_lookup_pallas,
+    sharded_routed_pack_grad_pallas,
+    sharded_routed_pack_lookup_pallas,
+)
+from repro.kernels.table_pack_lookup import (
+    sharded_pack_grad_pallas,
+    sharded_pack_lookup_pallas,
+    table_pack_lookup_pallas,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EA = 1e-4
+FUNCS = tuple(function_names())
+FAST_FUNCS = ("gelu", "tanh", "log")  # same fast-tier subsample as conformance
+
+_CACHE = {}
+
+
+def _specs():
+    if "specs" not in _CACHE:
+        _CACHE["specs"] = [cached_table(n, EA) for n in FUNCS]
+    return _CACHE["specs"]
+
+
+def _layout():
+    if "layout" not in _CACHE:
+        _CACHE["layout"] = pack_layout(_specs())
+    return _CACHE["layout"]
+
+
+def _pack():
+    if "pack" not in _CACHE:
+        _CACHE["pack"] = pack_specs(_specs())
+    return _CACHE["pack"]
+
+
+def _spack(n_shards=3):
+    key = ("spack", n_shards)
+    if key not in _CACHE:
+        _CACHE[key] = from_sharded_layout(shard_pack_layout(_layout(), n_shards))
+    return _CACHE[key]
+
+
+def probe(name, n=2048):
+    lo, hi = get_function(name).interval
+    span = hi - lo
+    rng = np.random.default_rng(11)
+    return jnp.asarray(
+        rng.uniform(lo - 0.5 * span, hi + 0.5 * span, n).astype(np.float32))
+
+
+def fn_params():
+    for f in FUNCS:
+        marks = () if f in FAST_FUNCS else (pytest.mark.slow,)
+        yield pytest.param(f, marks=marks, id=f)
+
+
+# ---------------------------- planner invariants --------------------------------
+
+
+class TestPlanner:
+    @pytest.mark.parametrize("n_shards", [1, 2, 3, 4, 7])
+    def test_slices_partition_the_footprint(self, n_shards):
+        lay = _layout()
+        sp = shard_pack_layout(lay, n_shards)
+        assert int(sp.shard_sizes.sum()) == lay.footprint
+        np.testing.assert_array_equal(
+            sp.shard_offsets, np.concatenate([[0], np.cumsum(sp.shard_sizes)[:-1]]))
+        # every real sub-interval owned by exactly one shard; padding by none
+        for f in range(lay.n_functions):
+            n = lay.n_intervals[f]
+            assert (sp.owner[f, :n] >= 0).all()
+            assert (sp.owner[f, :n] < n_shards).all()
+            assert (sp.owner[f, n:] == -1).all()
+
+    @pytest.mark.parametrize("n_shards", [2, 3, 4])
+    def test_ownership_is_contiguous_in_pack_order(self, n_shards):
+        """Slices must be contiguous runs of the values vector (a shard's
+        entries are one block, so one device_put slice serves it)."""
+        lay = _layout()
+        sp = shard_pack_layout(lay, n_shards)
+        order = []
+        for f in range(lay.n_functions):
+            order += list(sp.owner[f, : lay.n_intervals[f]])
+        assert order == sorted(order)
+
+    @pytest.mark.parametrize("n_shards", [1, 2, 3, 4])
+    def test_rebasing_reproduces_the_global_values(self, n_shards):
+        """local_base re-addresses every owned sub-interval into its shard's
+        slice without changing a single stored value."""
+        lay = _layout()
+        sp = shard_pack_layout(lay, n_shards)
+        for f in range(lay.n_functions):
+            for j in range(lay.n_intervals[f]):
+                s = int(sp.owner[f, j])
+                k = int(lay.seg_count[f, j]) + 1  # entries incl. both endpoints
+                lb, gb = int(sp.local_base[f, j]), int(lay.base[f, j])
+                sv = sp.shard_values(s)
+                assert 0 <= lb and lb + k <= len(sv)
+                np.testing.assert_array_equal(sv[lb : lb + k],
+                                              lay.values[gb : gb + k])
+
+    @pytest.mark.parametrize("n_shards", [2, 3, 4, 7])
+    def test_per_shard_vmem_beats_replicated(self, n_shards):
+        lay = _layout()
+        sp = shard_pack_layout(lay, n_shards)
+        assert sp.vmem().padded_bytes < lay.vmem().padded_bytes
+
+    def test_single_shard_is_the_identity_plan(self):
+        lay = _layout()
+        sp = shard_pack_layout(lay, 1)
+        np.testing.assert_array_equal(sp.shard_values(0), lay.values)
+        for f in range(lay.n_functions):
+            n = lay.n_intervals[f]
+            np.testing.assert_array_equal(sp.local_base[f, :n], lay.base[f, :n])
+
+    def test_invalid_shard_counts_rejected(self):
+        with pytest.raises(ValueError, match="n_shards"):
+            shard_pack_layout(_layout(), 0)
+        with pytest.raises(ValueError, match="cannot split"):
+            shard_pack_layout(_layout(), _layout().footprint + 1)
+
+
+# ---------------------------- off-mesh bit parity -------------------------------
+
+
+@pytest.mark.parametrize("name", fn_params())
+@pytest.mark.parametrize("extrapolate", [False, True], ids=["clamp", "extrap"])
+def test_sharded_ref_matches_replicated_bitwise(name, extrapolate):
+    """The stacked-shard-axis oracle == the replicated pack, bit for bit,
+    including deep out-of-range tails."""
+    x = probe(name)
+    pack, spack = _pack(), _spack()  # built OUTSIDE the traces below
+    want = jax.jit(
+        lambda v: eval_pack_ref(pack, name, v, extrapolate=extrapolate))(x)
+    got = jax.jit(
+        lambda v: eval_sharded_ref(spack, name, v,
+                                   extrapolate=extrapolate))(x)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("name", fn_params())
+def test_sharded_kernel_matches_oracle_bitwise(name):
+    """Per-shard Pallas launches + sum == the jnp sharded oracle == the
+    replicated kernel."""
+    x = probe(name)
+    pack, spack = _pack(), _spack()
+    ref = jax.jit(lambda v: eval_sharded_ref(spack, name, v))(x)
+    pal = sharded_pack_lookup_pallas(spack, name, x)
+    repl = table_pack_lookup_pallas(pack, name, x)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+    np.testing.assert_array_equal(np.asarray(repl), np.asarray(pal))
+
+
+@pytest.mark.parametrize("name", fn_params())
+def test_sharded_slope_matches_replicated_bitwise(name):
+    x = probe(name)
+    pack, spack = _pack(), _spack()
+    want = jax.jit(lambda v: eval_pack_slope(pack, name, v))(x)
+    got = jax.jit(lambda v: eval_sharded_slope(spack, name, v))(x)
+    _, pal = sharded_pack_grad_pallas(spack, name, x)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(pal))
+
+
+def test_routed_sharded_matches_replicated_routed():
+    """Dynamic per-row dispatch over the sharded pack == the replicated
+    routed kernel for a mixed routing, bit for bit."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 4, (12, 256)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, len(FUNCS), 12), jnp.int32)
+    pack, spack = _pack(), _spack()
+    want = routed_pack_lookup_pallas(pack, ids, x)
+    got = sharded_routed_pack_lookup_pallas(spack, ids, x)
+    ref = jax.jit(lambda v: eval_routed_sharded_ref(spack, ids, v))(x)
+    oracle = jax.jit(lambda v: eval_routed_ref(pack, ids, v))(x)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    np.testing.assert_array_equal(np.asarray(oracle), np.asarray(ref))
+    y, dy = sharded_routed_pack_grad_pallas(spack, ids, x)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(y))
+    assert np.isfinite(np.asarray(dy)).all()
+
+
+def test_unary_mode_matches_table_pack_bitwise():
+    """ApproxConfig(mode='sharded_pack') serves the same bits (value AND
+    table-slope gradient) as mode='table_pack' — the user-facing contract."""
+    shard_cfg = ApproxConfig(mode="sharded_pack", e_a=EA, pack_shards=3)
+    pack_cfg = ApproxConfig(mode="table_pack", e_a=EA)
+    x = jnp.asarray(
+        np.random.default_rng(4).normal(0, 3, 4096).astype(np.float32))
+    for act in ("gelu", "tanh", "sigmoid", "exp"):
+        fs, fp = shard_cfg.unary(act), pack_cfg.unary(act)
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(fs)(x)), np.asarray(jax.jit(fp)(x)),
+            err_msg=act)
+        gs = jax.jit(jax.grad(lambda v: fs(v).sum()))(x)
+        gp = jax.jit(jax.grad(lambda v: fp(v).sum()))(x)
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(gp),
+                                      err_msg=f"{act} grad")
+
+
+def test_exact_grad_mode_uses_analytic_derivative():
+    cfg = ApproxConfig(mode="sharded_pack", e_a=EA, exact_grad=True)
+    f = cfg.unary("gelu")
+    x = jnp.zeros((8,), jnp.float32)
+    g = np.asarray(jax.grad(lambda v: f(v).sum())(x))
+    # exact gelu'(0) = 0.5 exactly; the table slope would differ
+    np.testing.assert_allclose(g, 0.5, atol=1e-6)
+
+
+# ---------------------------- mesh (shard_map) parity ---------------------------
+
+
+def run_subprocess(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + ":" + REPO
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=420)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_mesh_parity_and_placement():
+    """On a real multi-device mesh: each device holds ONE values slice
+    (place_sharded_pack), and the shard_map + psum lookup — jnp body AND
+    Pallas body — is bit-identical to the replicated pack."""
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.approx import pack_specs
+from repro.approx.table_pack import eval_pack_ref, eval_sharded_mesh, shard_pack
+from repro.core import cached_table, pack_layout
+from repro.launch.mesh import make_sharded_pack_mesh
+from repro.parallel.sharding import place_sharded_pack, use_sharding
+
+names = ("gelu", "silu", "tanh", "sigmoid_sym", "softplus", "exp_neg")
+specs = [cached_table(n, 1e-4) for n in names]
+pack = pack_specs(specs)
+x = jnp.asarray(np.random.default_rng(0).normal(0, 3, (16, 512)).astype(np.float32))
+for S, nd in ((2, 2), (4, 1)):
+    spack = shard_pack(pack_layout(specs), S)
+    mesh = make_sharded_pack_mesh(S, n_data=nd)
+    placed = place_sharded_pack(spack, mesh)
+    shards = placed.values.addressable_shards
+    assert len(shards) == nd * S
+    assert all(s.data.shape[0] == 1 for s in shards), "values not split per device"
+    for name in names:
+        want = jax.jit(lambda v: eval_pack_ref(pack, name, v))(x)
+        with use_sharding(mesh):
+            got = jax.jit(lambda v: eval_sharded_mesh(placed, name, v, mesh))(x)
+            got_pal = jax.jit(lambda v: eval_sharded_mesh(
+                placed, name, v, mesh, use_pallas=True))(x)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got_pal))
+print("MESH_SHARDED_OK")
+""")
+    assert "MESH_SHARDED_OK" in out
+
+
+@pytest.mark.slow
+def test_mesh_unary_auto_dispatch():
+    """ApproxConfig(mode='sharded_pack') picks the shard_map path when the
+    bound mesh's 'model' axis matches pack_shards — and stays bit-identical
+    to the un-meshed call."""
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.approx import ApproxConfig
+from repro.launch.mesh import make_sharded_pack_mesh
+from repro.parallel.sharding import use_sharding
+
+cfg = ApproxConfig(mode="sharded_pack", e_a=1e-4, pack_shards=2)
+x = jnp.asarray(np.random.default_rng(1).normal(0, 3, 4096).astype(np.float32))
+f = cfg.unary("gelu")
+plain = np.asarray(jax.jit(f)(x))
+mesh = make_sharded_pack_mesh(2, n_data=2)
+with use_sharding(mesh):
+    meshed = np.asarray(jax.jit(cfg.unary("gelu"))(x))
+np.testing.assert_array_equal(plain, meshed)
+print("MESH_UNARY_OK")
+""")
+    assert "MESH_UNARY_OK" in out

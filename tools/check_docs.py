@@ -1,0 +1,88 @@
+"""Docs-drift gate: the mode matrices must cover every ApproxConfig mode.
+
+The cross-mode conformance suite pins the CODE side of a new mode (it must
+join ``repro.approx.TABLE_MODES`` or tests/test_conformance.py fails); this
+script pins the DOCS side: every mode — ``exact`` plus the whole of
+``TABLE_MODES`` — must appear as a backticked row in BOTH the full matrix in
+docs/architecture.md and the summary matrix in README.md, and every doc page
+the architecture matrix links must exist.  CI runs it next to the bench
+smokes, so a PR that adds a mode without documenting it fails fast.
+
+Run:  PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.approx import TABLE_MODES  # noqa: E402
+
+ALL_MODES = ("exact",) + tuple(TABLE_MODES)
+
+MATRIX_FILES = (
+    os.path.join(REPO, "docs", "architecture.md"),
+    os.path.join(REPO, "README.md"),
+)
+
+
+def matrix_rows(path: str) -> list[str]:
+    """Markdown table rows (lines starting with '|') of the file."""
+    with open(path) as f:
+        return [line for line in f if line.lstrip().startswith("|")]
+
+
+def missing_modes(path: str) -> list[str]:
+    rows = matrix_rows(path)
+    missing = []
+    for mode in ALL_MODES:
+        cell = f"`{mode}`"
+        if not any(cell in row for row in rows):
+            missing.append(mode)
+    return missing
+
+
+def dangling_links(path: str) -> list[str]:
+    """Relative .md links in the file that do not resolve on disk."""
+    with open(path) as f:
+        text = f.read()
+    out = []
+    for target in re.findall(r"\]\(([^)#]+\.md)\)", text):
+        if target.startswith("http"):
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            out.append(target)
+    return out
+
+
+def main() -> None:
+    failures = []
+    for path in MATRIX_FILES:
+        rel = os.path.relpath(path, REPO)
+        if not os.path.exists(path):
+            failures.append(f"{rel}: file missing")
+            continue
+        miss = missing_modes(path)
+        if miss:
+            failures.append(
+                f"{rel}: mode matrix is missing {miss} — every ApproxConfig "
+                f"mode must appear as a backticked table row")
+        dead = dangling_links(path)
+        if dead:
+            failures.append(f"{rel}: dangling doc links {dead}")
+    if failures:
+        print("docs drift check FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        raise SystemExit(1)
+    print(f"docs drift check OK: {len(ALL_MODES)} modes covered in "
+          f"{', '.join(os.path.relpath(p, REPO) for p in MATRIX_FILES)}")
+
+
+if __name__ == "__main__":
+    main()
