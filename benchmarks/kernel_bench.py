@@ -33,6 +33,9 @@ BENCH_SERVE_JSON = os.path.join(
 BENCH_SHARDEDPACK_JSON = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_shardedpack.json")
+BENCH_POLYPACK_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_polypack.json")
 
 
 def _time(f, *args, reps=20) -> float:
@@ -219,6 +222,124 @@ def quantpack_bench(size: int = 1 << 18, e_a: float = 1e-4,
               f"{rv:.2f}x total VMEM")
     print(f"[quantpack] report -> {out_path}")
     return rows
+
+
+def polypack_bench(size: int = 1 << 18, e_a: float = 1e-4,
+                   out_path: str = BENCH_POLYPACK_JSON) -> List[tuple]:
+    """Design-space planner report -> BENCH_polypack.json.
+
+    Prices the planner's (degree, dtype) menu against both hand-tuned
+    baselines at the same Ea over DEFAULT_PACK_FUNCTIONS: the linear-f32 pack
+    (the PR 2 artifact — entries axis) and the quant splitter's auto pack
+    (the PR 3 artifact — VMEM axis).  Per variant it records the plan's total
+    entries / stored bytes / padded VMEM residency plus the fused poly-kernel
+    dispatch latency on this host.  The acceptance headline is that the auto
+    plan SUBSUMES both baselines at once: strictly fewer entries than
+    linear-f32 AND no more padded VMEM than the quant auto pack (see
+    ``polypack_bench_gate``); the forced-degree rows show where each win
+    comes from (degree-2+ buys the entry reduction, narrow codes the bytes).
+    """
+    from repro.approx import DEFAULT_PACK_FUNCTIONS, build_pack
+    from repro.approx.table_pack import from_poly_layout
+    from repro.core import (plan_quant_member, poly_pack_layout,
+                            quant_pack_layout, vmem_cost_pack)
+    from repro.core.design import plan
+    from repro.core.flow import cached_table
+    from repro.kernels.ops import poly_pack_lookup, table_pack_lookup
+
+    names = DEFAULT_PACK_FUNCTIONS
+    x = jnp.asarray(np.random.default_rng(7).normal(0, 3, size).astype(np.float32))
+    report = {"e_a": e_a, "functions": list(names), "probe_size": size,
+              "packs": {}}
+
+    f32_pack = build_pack(names, e_a)
+    specs = [cached_table(n, e_a) for n in names]
+    c = vmem_cost_pack([s.footprint for s in specs],
+                       [s.n_intervals for s in specs])
+    t_f32 = _time(lambda v: table_pack_lookup(f32_pack, "silu", v), x)
+    report["packs"]["linear_f32"] = {
+        "footprint_entries": f32_pack.footprint,
+        "footprint_bytes": f32_pack.footprint * 4,
+        "vmem_padded_bytes": c.padded_bytes,
+        "dispatch_us": round(t_f32, 1),
+    }
+
+    # the quant splitter's auto pack: the hand-tuned VMEM bar the planner
+    # must not regress (same Ea, same functions, degree fixed at 1)
+    qlayout = quant_pack_layout(
+        [plan_quant_member(n, e_a, dtype="auto") for n in names])
+    report["packs"]["quant_auto"] = {
+        "footprint_entries": qlayout.footprint,
+        "footprint_bytes": qlayout.footprint_bytes,
+        "vmem_padded_bytes": qlayout.vmem().padded_bytes,
+    }
+
+    for label, degrees in (("d1", (1,)), ("d2", (2,)), ("d3", (3,)),
+                           ("auto", None)):
+        p = (plan(names, e_a) if degrees is None
+             else plan(names, e_a, degrees=degrees))
+        pack = from_poly_layout(poly_pack_layout(list(p.members)))
+        tp = _time(lambda v, pk=pack: poly_pack_lookup(pk, "silu", v), x)
+        report["packs"][label] = {
+            "choices": {ch.name: [ch.degree, ch.dtype] for ch in p.chosen},
+            "footprint_entries": p.total_entries,
+            "footprint_bytes": p.total_bytes,
+            "vmem_padded_bytes": p.vmem().padded_bytes,
+            "dispatch_us": round(tp, 1),
+        }
+
+    lin = report["packs"]["linear_f32"]
+    auto = report["packs"]["auto"]
+    report["entry_reduction_vs_linear_f32"] = round(
+        lin["footprint_entries"] / auto["footprint_entries"], 2)
+    report["vmem_vs_quant_auto"] = round(
+        auto["vmem_padded_bytes"]
+        / report["packs"]["quant_auto"]["vmem_padded_bytes"], 3)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+    rows = []
+    for k, v in report["packs"].items():
+        t = v.get("dispatch_us")
+        rows.append((f"kernel.polypack.{k}.footprint_entries",
+                     v["footprint_entries"],
+                     f"bytes={v['footprint_bytes']} "
+                     f"vmem={v['vmem_padded_bytes']}B"
+                     + (f" dispatch={t}us" if t is not None else "")))
+        print(f"[polypack] {k:10s} entries={v['footprint_entries']:6d} "
+              f"bytes={v['footprint_bytes']:6d} "
+              f"vmem={v['vmem_padded_bytes']:6d}B"
+              + (f" dispatch={t:8.1f}us" if t is not None else ""))
+    rows.append(("kernel.polypack.entry_reduction_vs_linear_f32",
+                 report["entry_reduction_vs_linear_f32"],
+                 f"vmem_vs_quant_auto={report['vmem_vs_quant_auto']}x"))
+    print(f"[polypack] auto plan: {report['entry_reduction_vs_linear_f32']}x "
+          f"fewer entries than linear f32, "
+          f"{report['vmem_vs_quant_auto']}x the quant-auto VMEM")
+    print(f"[polypack] report -> {out_path}")
+    return rows
+
+
+def polypack_bench_gate(report_path: str = BENCH_POLYPACK_JSON) -> None:
+    """CI smoke gate over BENCH_polypack.json: the planner's auto pick must
+    subsume BOTH hand-tuned baselines at equal Ea — strictly fewer entries
+    than the linear-f32 pack AND no more padded VMEM than the quant splitter's
+    auto pack — or the unified design space buys nothing over PR 2/PR 3."""
+    with open(report_path) as f:
+        report = json.load(f)
+    auto = report["packs"]["auto"]
+    lin = report["packs"]["linear_f32"]
+    quant = report["packs"]["quant_auto"]
+    if auto["footprint_entries"] >= lin["footprint_entries"]:
+        raise SystemExit(
+            f"polypack: auto plan entries {auto['footprint_entries']} >= "
+            f"linear f32 {lin['footprint_entries']} — degree-2+ bought nothing")
+    if auto["vmem_padded_bytes"] > quant["vmem_padded_bytes"]:
+        raise SystemExit(
+            f"polypack: auto plan VMEM {auto['vmem_padded_bytes']}B > "
+            f"quant auto {quant['vmem_padded_bytes']}B — the planner "
+            f"regressed the quantization win")
 
 
 def routed_dispatch_bench(size: int = 1 << 20, e_a: float = 1e-4,
@@ -522,6 +643,9 @@ def main() -> None:
     ap.add_argument("--shardedpack", action="store_true",
                     help="emit BENCH_shardedpack.json (per-shard VMEM "
                          "high-water vs replicated + dispatch latency)")
+    ap.add_argument("--polypack", action="store_true",
+                    help="emit BENCH_polypack.json (planner auto pick vs "
+                         "linear-f32 entries and quant-auto VMEM)")
     ap.add_argument("--size", type=int, default=None,
                     help="probe tensor size (default 2^18; 2^20 for "
                          "--routedpack so static and routed tile to the same "
@@ -553,12 +677,17 @@ def main() -> None:
         shardedpack_bench(args.size or (1 << 18), args.ea,
                           out_path=args.out or BENCH_SHARDEDPACK_JSON)
         shardedpack_bench_gate(args.out or BENCH_SHARDEDPACK_JSON)
+    elif args.polypack:
+        polypack_bench(args.size or (1 << 18), args.ea,
+                       args.out or BENCH_POLYPACK_JSON)
+        polypack_bench_gate(args.out or BENCH_POLYPACK_JSON)
     else:
         activation_bench(args.size or (1 << 18))
         interval_count_flatness()
         pack_dispatch_bench(args.size or (1 << 18))
         routed_dispatch_bench(args.size or (1 << 20))
         shardedpack_bench(args.size or (1 << 18))
+        polypack_bench(args.size or (1 << 18))
 
 
 if __name__ == "__main__":

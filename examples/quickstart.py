@@ -12,6 +12,8 @@
    ShardedPack (the pack's values split over the mesh 'model' axis with
    per-shard base rebasing, bit-identical to the replicated pack,
    docs/sharding.md).
+7. The design-space planner: degree-1..3 Horner cells x f32/int16/int8 codes
+   searched as ONE space, with byte-budgeted plans (docs/planner.md).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 (The full mode matrix — every ApproxConfig mode with its kernel, oracle, and
@@ -131,4 +133,36 @@ print(f"sharded vs replicated pack max diff:        "
       f"{float(jnp.max(jnp.abs(y_sh - y_re))):.1e} (bit-identical)")
 print(f"per-core values entries: {repl.footprint} replicated -> "
       f"{spack.footprint_per_shard} per shard ({spack.n_shards} shards)")
+
+print("\n=== 7. The design-space planner: degree x width under a byte budget ===")
+# plan() picks one (degree, dtype) candidate per function from its verified
+# Pareto menu: degree-2+ cells shrink ENTRIES (the remainder bound scales as
+# h^(d+1)), narrow codes shrink BYTES — one search subsumes both passes.
+from repro.core import get_function, plan
+
+PNAMES = ("gelu", "tanh", "exp_neg", "sigmoid_sym")
+free = plan(PNAMES, QEA)                      # cheapest per function
+tight = plan(PNAMES, QEA, budget_bytes=2048)  # greedy downgrade until it fits
+for label, p in (("auto  ", free), ("2048 B", tight)):
+    picks = ", ".join(f"{c.name}=d{c.degree}/{c.dtype}" for c in p.chosen)
+    print(f"plan[{label}]: {p.total_entries} entries, {p.total_bytes} B "
+          f"(vmem {p.vmem().padded_bytes} B) -- {picks}")
+for m in free.members:  # every member still meets the paper's Ea contract
+    err = m.max_error_on_grid(n=4001)
+    assert err <= QEA * (1 + 1e-6)
+name = free.chosen[0].name
+print(f"measured max |{name} - member| = "
+      f"{free.members[0].max_error_on_grid(n=4001):.2e} <= Ea = {QEA}")
+
+# The runtime artifact: one pack mixing degrees/widths, served by the fused
+# Horner kernel through the same one-knob config (budget included; the
+# default pack carries 6 functions, so its floor is higher than PNAMES')
+pcfg = AC(mode="poly_pack", e_a=QEA, pack_budget=4096)
+ppack = pcfg.poly_pack()
+xs = jnp.linspace(-4, 4, 2049, dtype=jnp.float32)[:-1]
+perr = float(jnp.max(jnp.abs(
+    pcfg.unary("gelu")(xs)
+    - jnp.asarray(get_function("gelu").f(np.asarray(xs, np.float64))))))
+print(f"poly_pack(budget=4096 B): {ppack.footprint_bytes} B stored, "
+      f"gelu kernel max err = {perr:.2e} <= ~Ea")
 print("\nquickstart OK")

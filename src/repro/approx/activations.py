@@ -4,9 +4,12 @@
 (ONE packed multi-function artifact + one fused kernel for the whole network),
 ``table_pack_ref`` (the pack's jnp oracle), ``quant_pack`` (the pack with
 int8/int16 entry codes + dequantize-on-read kernels), ``quant_pack_ref``
-(the quantized pack's jnp oracle), or the ``routed_*`` variants
-(``routed_pack`` / ``routed_pack_ref`` / ``routed_quant_pack`` /
-``routed_quant_pack_ref``), which serve the same packs through DYNAMIC
+(the quantized pack's jnp oracle), ``poly_pack`` / ``poly_pack_ref`` (the
+Pareto-planned pack: per-function degree-1..3 Horner cells in the cheapest of
+int8/int16/f32, picked by :func:`repro.core.design.plan`), or the ``routed_*``
+variants (``routed_pack`` / ``routed_pack_ref`` / ``routed_quant_pack`` /
+``routed_quant_pack_ref`` / ``routed_poly_pack`` / ``routed_poly_pack_ref``),
+which serve the same packs through DYNAMIC
 per-row fn_id dispatch — the function identity is a runtime operand of a
 scalar-prefetch kernel, so mixed-function batches (MoE-style routed
 activations; see :meth:`ApproxConfig.routed_fn`) and every member's unary
@@ -31,28 +34,37 @@ from repro.core.flow import cached_table
 from repro.core.functions import get as get_function
 
 from .jax_table import JaxTable, from_spec, make_table_fn
-from .table_pack import (QuantTablePack, ShardedTablePack, TablePack,
-                         build_pack, build_quant_pack, build_sharded_pack,
-                         make_pack_fn, make_quant_pack_fn, make_routed_fn,
-                         make_routed_unary_fn, make_sharded_pack_fn)
+from .table_pack import (PolyTablePack, QuantTablePack, ShardedTablePack,
+                         TablePack, build_pack, build_poly_pack,
+                         build_quant_pack, build_sharded_pack, make_pack_fn,
+                         make_poly_pack_fn, make_quant_pack_fn,
+                         make_routed_fn, make_routed_unary_fn,
+                         make_sharded_pack_fn)
 
 Mode = str  # "exact" | "table_ref" | "table_pallas" | "table_pack" |
 #             "table_pack_ref" | "quant_pack" | "quant_pack_ref" |
+#             "poly_pack" | "poly_pack_ref" |
 #             "routed_pack" | "routed_pack_ref" | "routed_quant_pack" |
-#             "routed_quant_pack_ref" | "sharded_pack" | "sharded_pack_ref"
+#             "routed_quant_pack_ref" | "routed_poly_pack" |
+#             "routed_poly_pack_ref" | "sharded_pack" | "sharded_pack_ref"
 
 ROUTED_MODES = ("routed_pack", "routed_pack_ref", "routed_quant_pack",
-                "routed_quant_pack_ref")
+                "routed_quant_pack_ref", "routed_poly_pack",
+                "routed_poly_pack_ref")
 SHARDED_MODES = ("sharded_pack", "sharded_pack_ref")
-TABLE_MODES = ("table_ref", "table_pallas", "table_pack", "table_pack_ref",
-               "quant_pack", "quant_pack_ref") + ROUTED_MODES + SHARDED_MODES
 PACK_MODES = ("table_pack", "table_pack_ref")
 QUANT_PACK_MODES = ("quant_pack", "quant_pack_ref")
+POLY_PACK_MODES = ("poly_pack", "poly_pack_ref")
+TABLE_MODES = (("table_ref", "table_pallas") + PACK_MODES + QUANT_PACK_MODES
+               + POLY_PACK_MODES + ROUTED_MODES + SHARDED_MODES)
 # modes whose pack artifact is the quantized one (vs the f32 pack)
 _QUANT_BACKED = QUANT_PACK_MODES + ("routed_quant_pack", "routed_quant_pack_ref")
+# modes whose pack artifact is the Pareto-planned polynomial one
+_POLY_BACKED = POLY_PACK_MODES + ("routed_poly_pack", "routed_poly_pack_ref")
 # modes whose runtime is the Pallas kernels (vs a jnp oracle)
-_PALLAS_BACKED = ("table_pallas", "table_pack", "quant_pack", "routed_pack",
-                  "routed_quant_pack", "sharded_pack")
+_PALLAS_BACKED = ("table_pallas", "table_pack", "quant_pack", "poly_pack",
+                  "routed_pack", "routed_quant_pack", "routed_poly_pack",
+                  "sharded_pack")
 
 
 def odd_extension(fn):
@@ -95,6 +107,7 @@ DEFAULT_PACK_FUNCTIONS = (
 # constructors re-request the same pack for every layer/activation.
 _PACK_CACHE: Dict[tuple, TablePack] = {}
 _QUANT_PACK_CACHE: Dict[tuple, QuantTablePack] = {}
+_POLY_PACK_CACHE: Dict[tuple, PolyTablePack] = {}
 _SHARDED_PACK_CACHE: Dict[tuple, ShardedTablePack] = {}
 
 _EXACT: Dict[str, Callable] = {
@@ -169,6 +182,12 @@ class ApproxConfig:
     # of int8/int16 from the budget split, or force "int8"/"int16").
     quant_rho: float = 0.9
     pack_dtype: str = "auto"
+    # poly_pack modes: optional total-bytes budget handed to the design-space
+    # planner (``design.plan``) — None keeps every function's Pareto-cheapest
+    # candidate; a budget greedily downgrades members until the pack fits.
+    # ``quant_rho`` / ``pack_dtype`` double as planner hints: the interp/quant
+    # error split and the candidate dtype menu ("auto" = int8/int16/f32).
+    pack_budget: Optional[int] = None
     # sharded_pack modes: how many ways the pack's values vector is split
     # (sub-interval granularity, per-shard base rebasing).  Runs distributed
     # when a use_sharding mesh binds a 'model' axis of this width, otherwise
@@ -209,20 +228,60 @@ class ApproxConfig:
                 intervals=dict(overrides))
         return _QUANT_PACK_CACHE[key]
 
-    def sharded_pack(self) -> ShardedTablePack:
-        """The shared pack, values-sharded ``pack_shards`` ways over 'model'."""
+    def poly_pack(self) -> PolyTablePack:
+        """The shared Pareto-planned pack (degree-1..3 cells, mixed widths)."""
         names = tuple(self.pack_functions)
         overrides = tuple(sorted(
             (k, v) for k, v in self.interval_overrides.items() if k in names))
         key = (names, self.e_a, self.algorithm, self.omega, overrides,
-               self.pack_shards)
+               self.quant_rho, self.pack_dtype, self.pack_budget)
+        if key not in _POLY_PACK_CACHE:
+            _POLY_PACK_CACHE[key] = build_poly_pack(
+                names, self.e_a, budget_bytes=self.pack_budget,
+                rho=self.quant_rho, dtype=self.pack_dtype,
+                algorithm=self.algorithm, omega=self.omega,
+                intervals=dict(overrides))
+        return _POLY_PACK_CACHE[key]
+
+    def _sharded_key(self) -> tuple:
+        names = tuple(self.pack_functions)
+        overrides = tuple(sorted(
+            (k, v) for k, v in self.interval_overrides.items() if k in names))
+        return (names, self.e_a, self.algorithm, self.omega, overrides,
+                self.pack_shards)
+
+    def sharded_pack(self) -> ShardedTablePack:
+        """The shared pack, values-sharded ``pack_shards`` ways over 'model'."""
+        key = self._sharded_key()
         if key not in _SHARDED_PACK_CACHE:
+            names, e_a, algorithm, omega, overrides, shards = key
             _SHARDED_PACK_CACHE[key] = build_sharded_pack(
-                names, self.e_a, self.pack_shards, algorithm=self.algorithm,
-                omega=self.omega, intervals=dict(overrides))
+                names, e_a, shards, algorithm=algorithm, omega=omega,
+                intervals=dict(overrides))
         return _SHARDED_PACK_CACHE[key]
 
+    def place_packs(self, mesh) -> None:
+        """Pre-place this config's pack over ``mesh`` (the threading half of
+        ``parallel.sharding.place_sharded_pack``): the cached sharded pack is
+        device_put so each 'model' shard holds ONE values slice, and every
+        activation closure built AFTER this call captures the placed arrays —
+        step 0 then runs without the first-dispatch reshard.  Call it before
+        constructing the model (``build_model(cfg, mesh=...)`` does).  No-op
+        for non-sharded modes, un-meshed runs, or a 'model' axis whose width
+        doesn't match ``pack_shards``; idempotent (re-placing placed arrays is
+        a device_put onto their existing sharding)."""
+        if mesh is None or self.mode not in SHARDED_MODES:
+            return
+        if ("model" not in mesh.axis_names
+                or mesh.shape["model"] != self.pack_shards):
+            return
+        from repro.parallel.sharding import place_sharded_pack
+        _SHARDED_PACK_CACHE[self._sharded_key()] = place_sharded_pack(
+            self.sharded_pack(), mesh)
+
     def _pack_for_mode(self):
+        if self.mode in _POLY_BACKED:
+            return self.poly_pack()
         if self.mode in _QUANT_BACKED:
             return self.quant_pack()
         if self.mode in SHARDED_MODES:
@@ -240,8 +299,8 @@ class ApproxConfig:
         if self.exact_grad:
             fn = get_function(reg_name)
             exact_d1 = partial(fn.d1f, xp=jnp)
-        if self.mode in (PACK_MODES + QUANT_PACK_MODES + ROUTED_MODES
-                         + SHARDED_MODES):
+        if self.mode in (PACK_MODES + QUANT_PACK_MODES + POLY_PACK_MODES
+                         + ROUTED_MODES + SHARDED_MODES):
             pack = self._pack_for_mode()
             if reg_name not in pack.names:
                 raise KeyError(
@@ -253,6 +312,8 @@ class ApproxConfig:
                 make = make_routed_unary_fn
             elif self.mode in SHARDED_MODES:
                 make = make_sharded_pack_fn
+            elif self.mode in POLY_PACK_MODES:
+                make = make_poly_pack_fn
             else:
                 make = make_quant_pack_fn if self.mode in _QUANT_BACKED \
                     else make_pack_fn

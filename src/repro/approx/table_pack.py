@@ -28,9 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flow import cached_table
-from repro.core.packing import (PackLayout, QuantPackLayout,
+from repro.core.packing import (PackLayout, PolyPackLayout, QuantPackLayout,
                                 ShardedPackLayout, pack_layout,
-                                quant_pack_layout, shard_pack_layout)
+                                poly_pack_layout, quant_pack_layout,
+                                shard_pack_layout)
 from repro.core.quantize import plan_quant_member
 from repro.core.table import TableSpec
 
@@ -471,6 +472,298 @@ def make_pack_fn(
 
 
 # --------------------------------------------------------------------------------------
+# PolyPack — planner-designed degree-d coefficient packs, Horner-evaluated on read.
+# --------------------------------------------------------------------------------------
+
+
+class PolyTablePack(NamedTuple):
+    """Device-ready polynomial multi-function pack.
+
+    Member ``fid`` stores ``degree + 1`` coefficient codes per cell in one of
+    THREE width-group vectors — ``codes8``/``codes16`` (integer codes) or
+    ``codes32`` (the f32 members' raw coefficients, carried through the same
+    dequant FMA with ``zero = ramp = 0, scale = 1`` so it is a bit-exact
+    identity).  The per-sub-interval dequant params are lane-padded to
+    ``max_degree + 1`` lanes for every member: a padded lane dequantizes to
+    exactly 0.0 and a leading zero flows through Horner as ``0*t + c = c``,
+    so ONE dequant + Horner op sequence serves mixed-degree, mixed-width
+    packs (see :class:`repro.core.packing.PolyPackLayout`).
+    """
+
+    names: Tuple[str, ...]  # static: member function names (fn_id order)
+    n_intervals: Tuple[int, ...]  # static: sub-interval count per member
+    degrees: Tuple[int, ...]  # static: interpolation degree per member
+    entry_bits: Tuple[int, ...]  # static: 8 | 16 | 32 → which codes vector
+    max_degree: int  # static: widest member degree (lane padding target)
+    boundaries: jax.Array  # (sum n_f+1,) f32 flat rows
+    inv_delta: jax.Array  # (sum n_f,) f32
+    base: jax.Array  # (sum n_f,) f32 — GLOBAL index into the width-group codes
+    seg_count: jax.Array  # (sum n_f,) f32
+    zero: jax.Array  # (sum n_f * (max_degree+1),) f32 lane-padded
+    ramp: jax.Array  # (sum n_f * (max_degree+1),) f32 lane-padded
+    scale: jax.Array  # (sum n_f * (max_degree+1),) f32 lane-padded
+    codes8: jax.Array  # (max(M8,1),) int8
+    codes16: jax.Array  # (max(M16,1),) int16
+    codes32: jax.Array  # (max(M32,1),) f32 — raw coefficients
+
+    @property
+    def n_functions(self) -> int:
+        return len(self.names)
+
+    @property
+    def max_lanes(self) -> int:
+        return self.max_degree + 1
+
+    @property
+    def footprint(self) -> int:
+        """Stored codes — excludes the 1-entry dummy of an unused width group,
+        so it agrees with :class:`PolyPackLayout`'s accounting."""
+        m8 = self.codes8.shape[0] if 8 in self.entry_bits else 0
+        m16 = self.codes16.shape[0] if 16 in self.entry_bits else 0
+        m32 = self.codes32.shape[0] if 32 in self.entry_bits else 0
+        return int(m8 + m16 + m32)
+
+    @property
+    def footprint_bytes(self) -> int:
+        m8 = self.codes8.shape[0] if 8 in self.entry_bits else 0
+        m16 = self.codes16.shape[0] if 16 in self.entry_bits else 0
+        m32 = self.codes32.shape[0] if 32 in self.entry_bits else 0
+        return int(m8 + 2 * m16 + 4 * m32)
+
+    def fn_id(self, name: str) -> int:
+        return _member_id(self.names, name)
+
+    def member_id(self, fn) -> int:
+        """Name or integer fn_id -> validated index (KeyError otherwise)."""
+        return _member_id(self.names, fn)
+
+    def bounds_offset(self, fid: int) -> int:
+        return sum(n + 1 for n in self.n_intervals[:fid])
+
+    def lane_offset(self, fid: int) -> int:
+        return sum(self.n_intervals[:fid])
+
+    def codes_for(self, fid: int) -> jax.Array:
+        bits = self.entry_bits[fid]
+        return (self.codes8 if bits == 8
+                else self.codes16 if bits == 16 else self.codes32)
+
+    def routing_scalars(self) -> Tuple[np.ndarray, ...]:
+        """Prefetched scalar operands for dynamic fn_id dispatch — the quant
+        tuple plus the per-member coefficient stride ``degree + 1``:
+        ``(n_arr, bounds_offsets, lane_offsets, entry_bits, strides)``."""
+        F = self.n_functions
+        return (np.asarray(self.n_intervals, dtype=np.int32),
+                np.asarray([self.bounds_offset(f) for f in range(F)], np.int32),
+                np.asarray([self.lane_offset(f) for f in range(F)], np.int32),
+                np.asarray(self.entry_bits, dtype=np.int32),
+                np.asarray([d + 1 for d in self.degrees], dtype=np.int32))
+
+
+def from_poly_layout(layout: PolyPackLayout) -> PolyTablePack:
+    if max(len(layout.codes8), len(layout.codes16),
+           len(layout.codes32)) >= (1 << 24):
+        raise ValueError("pack footprint exceeds f32 exact-integer range")
+
+    def codes_arr(codes: np.ndarray, dtype) -> jax.Array:
+        if len(codes) == 0:  # keep a 1-entry dummy so the operand stays valid
+            return jnp.zeros((1,), dtype=dtype)
+        return jnp.asarray(codes, dtype=dtype)
+
+    f32 = lambda a: jnp.asarray(np.asarray(a, dtype=np.float64),
+                                dtype=jnp.float32)
+    return PolyTablePack(
+        names=layout.names,
+        n_intervals=layout.n_intervals,
+        degrees=layout.degrees,
+        entry_bits=layout.entry_bits,
+        max_degree=layout.max_degree,
+        boundaries=f32(layout.boundaries),
+        inv_delta=f32(layout.inv_delta),
+        base=f32(layout.base),
+        seg_count=f32(layout.seg_count),
+        zero=f32(layout.zero),
+        ramp=f32(layout.ramp),
+        scale=f32(layout.scale),
+        codes8=codes_arr(layout.codes8, jnp.int8),
+        codes16=codes_arr(layout.codes16, jnp.int16),
+        codes32=codes_arr(layout.codes32, jnp.float32),
+    )
+
+
+def build_poly_pack(
+    names: Sequence[str],
+    e_a: float,
+    *,
+    budget_bytes: Optional[int] = None,
+    rho: float = 0.9,
+    dtype: str = "auto",
+    algorithm: str = "hierarchical",
+    omega: float = 0.3,
+    intervals: Optional[dict] = None,
+) -> PolyTablePack:
+    """Planner-driven pack: ``repro.core.design.plan`` picks one (degree,
+    dtype) candidate per function — cheapest when ``budget_bytes=None``,
+    preferred-then-downgraded to fit a byte budget otherwise — and the chosen
+    members fuse into one device artifact.  ``dtype`` narrows the planner's
+    menu ('auto' keeps f32/int16/int8 all open); ``rho`` splits e_a between
+    interpolation and code rounding for the integer candidates."""
+    from repro.core import design
+
+    dtypes = design.POLY_DTYPES if dtype == "auto" else (dtype,)
+    p = design.plan(list(names), e_a, budget_bytes, dtypes=dtypes,
+                    algorithm=algorithm, omega=omega, rho=rho,
+                    intervals=intervals)
+    return from_poly_layout(poly_pack_layout(list(p.members)))
+
+
+def _poly_select(pack: PolyTablePack, fid: int, xf: jax.Array):
+    """Selector + gathers against member ``fid``'s ragged lane segment; the
+    dequant planes come back with a trailing ``max_degree + 1`` lane axis."""
+    bo, lo = pack.bounds_offset(fid), pack.lane_offset(fid)
+    n = pack.n_intervals[fid]
+    lmax = pack.max_lanes
+    brow = pack.boundaries[bo : bo + n + 1]
+    j = select_interval(brow, n, xf)
+    p = jnp.take(brow, j, axis=0)
+    invd = jnp.take(pack.inv_delta[lo : lo + n], j, axis=0)
+    base = jnp.take(pack.base[lo : lo + n], j, axis=0)
+    segs = jnp.take(pack.seg_count[lo : lo + n], j, axis=0)
+    lanes = slice(lo * lmax, (lo + n) * lmax)
+    zero = jnp.take(pack.zero[lanes].reshape(n, lmax), j, axis=0)
+    ramp = jnp.take(pack.ramp[lanes].reshape(n, lmax), j, axis=0)
+    scale = jnp.take(pack.scale[lanes].reshape(n, lmax), j, axis=0)
+    return p, invd, base, segs, zero, ramp, scale
+
+
+def _poly_coeffs(pack: PolyTablePack, fid: int, base, i, zero, ramp, scale):
+    """Gather + dequantize the cell's ``degree + 1`` monomial coefficients.
+
+    Code of cell ``i``, lane ``l`` lives at ``base + i*(degree+1) + l`` in the
+    member's width group; the dequant FMA ``(zero + ramp*i) + scale*q`` is the
+    quant-pack sequence per lane (identity for f32 members).
+    """
+    codes = pack.codes_for(fid)
+    stride = float(pack.degrees[fid] + 1)
+    cs = []
+    for l in range(pack.degrees[fid] + 1):
+        a = (base + i * stride + float(l)).astype(jnp.int32)
+        q = jnp.take(codes, a, axis=0).astype(jnp.float32)
+        cs.append((zero[..., l] + ramp[..., l] * i) + scale[..., l] * q)
+    return cs
+
+
+def poly_horner(cs, t):
+    """p(t) with monomial coefficients ``cs[k]`` (constant term first)."""
+    y = cs[-1]
+    for c in reversed(cs[:-1]):
+        y = y * t + c
+    return y
+
+
+def poly_horner_d1(cs, t):
+    """p'(t) in the derivative Horner form the kernels mirror."""
+    if len(cs) == 1:
+        return jnp.zeros_like(t)
+    g = cs[-1] * float(len(cs) - 1)
+    for k in range(len(cs) - 2, 0, -1):
+        g = g * t + cs[k] * float(k)
+    return g
+
+
+def eval_poly_pack_ref(pack: PolyTablePack, fn, x: jax.Array, *,
+                       extrapolate: bool = False) -> jax.Array:
+    """Pure-jnp dequantize + Horner oracle — bit-identical to the Pallas
+    kernel.  ``extrapolate=True`` continues past the cell grid along the
+    tangent at the clamped coordinate: ``y = p(tc) + p'(tc) * (t - tc)``."""
+    fid = _resolve(pack, fn)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    p, invd, base, segs, zero, ramp, scale = _poly_select(pack, fid, xf)
+    u = (xf - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    cs = _poly_coeffs(pack, fid, base, i, zero, ramp, scale)
+    t = u - i
+    tc = jnp.clip(t, 0.0, 1.0)
+    y = poly_horner(cs, tc)
+    if extrapolate:
+        y = y + poly_horner_d1(cs, tc) * (t - tc)
+    return y.astype(dtype)
+
+
+def eval_poly_pack_slope(pack: PolyTablePack, fn, x: jax.Array, *,
+                         extrapolate: bool = False) -> jax.Array:
+    """d/dx of the polynomial surrogate: ``p'(tc) / delta`` (the tangent the
+    extrapolating value path continues along), masked outside the domain when
+    not extrapolating."""
+    fid = _resolve(pack, fn)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    p, invd, base, segs, zero, ramp, scale = _poly_select(pack, fid, xf)
+    u = (xf - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    cs = _poly_coeffs(pack, fid, base, i, zero, ramp, scale)
+    tc = jnp.clip(u - i, 0.0, 1.0)
+    slope = poly_horner_d1(cs, tc) * invd
+    if not extrapolate:
+        bo = pack.bounds_offset(fid)
+        n = pack.n_intervals[fid]
+        inside = ((xf >= pack.boundaries[bo]) &
+                  (xf < pack.boundaries[bo + n]))
+        slope = slope * inside.astype(jnp.float32)
+    return slope.astype(dtype)
+
+
+def make_poly_pack_fn(
+    pack: PolyTablePack,
+    name: str,
+    *,
+    use_pallas: bool = True,
+    exact_d1=None,
+    extrapolate: bool = False,
+):
+    """Differentiable unary ``f(x)`` served from the polynomial pack.
+
+    Mirrors :func:`make_quant_pack_fn`: Horner-slope tangent by default,
+    ``exact_d1`` for the analytic derivative, ``use_pallas=True`` for the
+    fused dequantize + Horner kernel (value + slope in one selector pass on
+    the training path).
+    """
+    fid = pack.fn_id(name)
+    if use_pallas:
+        from repro.kernels.table_pack_lookup import (
+            poly_pack_grad_pallas, poly_pack_lookup_pallas)
+
+        fwd_impl = lambda v: poly_pack_lookup_pallas(
+            pack, fid, v, extrapolate=extrapolate)
+        fused_grad = lambda v: poly_pack_grad_pallas(
+            pack, fid, v, extrapolate=extrapolate)
+    else:
+        fwd_impl = lambda v: eval_poly_pack_ref(pack, fid, v,
+                                                extrapolate=extrapolate)
+        fused_grad = None
+
+    @jax.custom_jvp
+    def f(x):
+        return fwd_impl(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        if exact_d1 is not None:
+            y = fwd_impl(x)
+            slope = exact_d1(x)
+        elif fused_grad is not None:
+            y, slope = fused_grad(x)
+        else:
+            y = fwd_impl(x)
+            slope = eval_poly_pack_slope(pack, fid, x, extrapolate=extrapolate)
+        return y, slope * dx
+
+    return f
+
+
+# --------------------------------------------------------------------------------------
 # ShardedPack — the pack's values vector partitioned over the 'model' mesh axis.
 # --------------------------------------------------------------------------------------
 #
@@ -887,6 +1180,23 @@ def eval_routed_quant_slope(pack: QuantTablePack, fn_ids, x: jax.Array, *,
         extrapolate)
 
 
+def eval_routed_poly_ref(pack: PolyTablePack, fn_ids, x: jax.Array, *,
+                         extrapolate=False) -> jax.Array:
+    """Routed dequantize + Horner oracle over the polynomial pack."""
+    return _routed_where(
+        pack, fn_ids, x,
+        lambda f, e: eval_poly_pack_ref(pack, f, x, extrapolate=e), extrapolate)
+
+
+def eval_routed_poly_slope(pack: PolyTablePack, fn_ids, x: jax.Array, *,
+                           extrapolate=False) -> jax.Array:
+    """d/dx of the routed polynomial surrogate."""
+    return _routed_where(
+        pack, fn_ids, x,
+        lambda f, e: eval_poly_pack_slope(pack, f, x, extrapolate=e),
+        extrapolate)
+
+
 def eval_routed_sharded_ref(pack: ShardedTablePack, fn_ids, x: jax.Array, *,
                             extrapolate=False) -> jax.Array:
     """Routed oracle over the SHARDED pack: row i through member ``fn_ids[i]``
@@ -923,16 +1233,21 @@ def make_routed_fn(
     value pass in the Pallas path.
     """
     quant = isinstance(pack, QuantTablePack)
+    poly = isinstance(pack, PolyTablePack)
     sharded = isinstance(pack, ShardedTablePack)
     if use_pallas:
         from repro.kernels.routed_pack_lookup import (
             routed_pack_grad_pallas, routed_pack_lookup_pallas,
+            routed_poly_pack_grad_pallas, routed_poly_pack_lookup_pallas,
             routed_quant_pack_grad_pallas, routed_quant_pack_lookup_pallas,
             sharded_routed_pack_grad_pallas, sharded_routed_pack_lookup_pallas)
 
         if sharded:
             lookup, gradk = (sharded_routed_pack_lookup_pallas,
                              sharded_routed_pack_grad_pallas)
+        elif poly:
+            lookup, gradk = (routed_poly_pack_lookup_pallas,
+                             routed_poly_pack_grad_pallas)
         elif quant:
             lookup, gradk = (routed_quant_pack_lookup_pallas,
                              routed_quant_pack_grad_pallas)
@@ -943,6 +1258,8 @@ def make_routed_fn(
     else:
         if sharded:
             ref, slope_ref = eval_routed_sharded_ref, eval_routed_sharded_slope
+        elif poly:
+            ref, slope_ref = eval_routed_poly_ref, eval_routed_poly_slope
         elif quant:
             ref, slope_ref = eval_routed_quant_ref, eval_routed_quant_slope
         else:
@@ -983,17 +1300,23 @@ def make_routed_unary_fn(
     oracle — bit-identical to the routed kernel by the dispatch contract.
     """
     quant = isinstance(pack, QuantTablePack)
+    poly = isinstance(pack, PolyTablePack)
     fid = pack.member_id(name)
     ids = jnp.full((1,), fid, dtype=jnp.int32)
     if use_pallas:
         from repro.kernels.routed_pack_lookup import (
             routed_pack_grad_pallas, routed_pack_lookup_pallas,
+            routed_poly_pack_grad_pallas, routed_poly_pack_lookup_pallas,
             routed_quant_pack_grad_pallas, routed_quant_pack_lookup_pallas)
 
-        lookup = routed_quant_pack_lookup_pallas if quant else \
-            routed_pack_lookup_pallas
-        gradk = routed_quant_pack_grad_pallas if quant else \
-            routed_pack_grad_pallas
+        if poly:
+            lookup, gradk = (routed_poly_pack_lookup_pallas,
+                             routed_poly_pack_grad_pallas)
+        elif quant:
+            lookup, gradk = (routed_quant_pack_lookup_pallas,
+                             routed_quant_pack_grad_pallas)
+        else:
+            lookup, gradk = routed_pack_lookup_pallas, routed_pack_grad_pallas
         fwd_impl = lambda v: lookup(
             pack, ids, v.reshape(1, -1), extrapolate=extrapolate
         ).reshape(v.shape)
@@ -1001,8 +1324,12 @@ def make_routed_unary_fn(
             r.reshape(v.shape) for r in gradk(
                 pack, ids, v.reshape(1, -1), extrapolate=extrapolate))
     else:
-        ref = eval_quant_pack_ref if quant else eval_pack_ref
-        slope_ref = eval_quant_pack_slope if quant else eval_pack_slope
+        if poly:
+            ref, slope_ref = eval_poly_pack_ref, eval_poly_pack_slope
+        elif quant:
+            ref, slope_ref = eval_quant_pack_ref, eval_quant_pack_slope
+        else:
+            ref, slope_ref = eval_pack_ref, eval_pack_slope
         fwd_impl = lambda v: ref(pack, fid, v, extrapolate=extrapolate)
         fused_grad = None
 

@@ -17,11 +17,26 @@ from .flow import FlowReport, cached_table, run_flow
 from .bram import bram_count, bram_count_packed, vmem_cost, vmem_cost_pack
 from .packing import (
     PackLayout,
+    PolyPackLayout,
     QuantPackLayout,
     ShardedPackLayout,
     pack_layout,
+    poly_pack_layout,
     quant_pack_layout,
     shard_pack_layout,
+)
+from .design import (
+    DesignCandidate,
+    PackPlan,
+    PolyMember,
+    build_poly_member,
+    deriv_probe,
+    enumerate_candidates,
+    interp_error_const,
+    pareto_front,
+    plan,
+    poly_cell_width,
+    poly_member,
 )
 from .quantize import (
     FixedPointFormat,
@@ -37,11 +52,15 @@ from .stats import TTestResult, outperforms, t_cdf, ttest2
 
 __all__ = [
     "ALGORITHMS",
+    "DesignCandidate",
     "FixedPointFormat",
     "FlowReport",
     "FunctionSpec",
     "PackLayout",
+    "PackPlan",
     "PAPER_FORMATS",
+    "PolyMember",
+    "PolyPackLayout",
     "QUANT_INT_BITS",
     "QuantMember",
     "QuantPackLayout",
@@ -53,17 +72,26 @@ __all__ = [
     "binary_split",
     "bram_count",
     "bram_count_packed",
+    "build_poly_member",
     "build_table",
     "cached_table",
     "chord_residual_ranges",
     "delta_for",
+    "deriv_probe",
+    "enumerate_candidates",
     "footprint",
     "function_names",
     "get_function",
     "hierarchical_split",
+    "interp_error_const",
     "outperforms",
     "pack_layout",
+    "pareto_front",
+    "plan",
     "plan_quant_member",
+    "poly_cell_width",
+    "poly_member",
+    "poly_pack_layout",
     "quant_pack_layout",
     "quantize_spec",
     "refine_for_quantization",

@@ -98,7 +98,9 @@ def vmem_cost_pack(
     function for mixed-precision packs (QuantPack stores int8 and int16 codes
     side by side; metadata stays f32 regardless).  ``meta_lanes`` counts the
     per-sub-interval f32 metadata lanes: 4 for the f32 pack (boundaries,
-    inv_delta, base, seg_count), 7 for QuantPack (+ scale, zero, ramp).
+    inv_delta, base, seg_count), 7 for QuantPack (+ scale, zero, ramp), and a
+    per-member list for PolyPack (4 + 3 * (degree + 1) lanes vary with the
+    member's interpolation degree; requires ``ragged_meta=True``).
 
     ``ragged_meta=False`` models :class:`PackLayout`'s padded (F, n_max)
     planes — the metadata cost is set by the WIDEST member, not the sum of
@@ -117,11 +119,19 @@ def vmem_cost_pack(
         if len(dtype_list) != len(footprints):
             raise ValueError("need one dtype_bytes per packed function")
     table = sum(m * db for m, db in zip(footprints, dtype_list))
+    if isinstance(meta_lanes, int):
+        lanes_list = [meta_lanes] * len(footprints)
+    else:
+        lanes_list = list(meta_lanes)
+        if len(lanes_list) != len(footprints):
+            raise ValueError("need one meta_lanes per packed function")
+        if not ragged_meta:
+            raise ValueError("per-member meta_lanes requires ragged_meta=True")
     if ragged_meta:
-        meta = sum((meta_lanes * n + 1) * 4 for n in n_list)
+        meta = sum((ml * n + 1) * 4 for ml, n in zip(lanes_list, n_list))
     else:
         n_max = max(n_list)
-        meta = len(footprints) * (meta_lanes * n_max + 1) * 4  # pinned f32
+        meta = len(footprints) * (lanes_list[0] * n_max + 1) * 4  # pinned f32
     pad = VMEM_SUBLANE_BYTES
     padded = math.ceil((table + meta) / pad) * pad
     return VmemCost(table, meta, padded, budget_bytes)

@@ -343,10 +343,18 @@ def plan_quant_member(
     rho: float = DEFAULT_RHO,
     dtype: str = "auto",
     cap: int = DEFAULT_REFINE_CAP,
+    degree: int = 1,
+    budget_bytes: Optional[int] = None,
 ) -> QuantMember:
     """The error-budget splitter: build the table at ``rho * e_a`` with the
     existing splitting algorithms, then pick the cheapest storage width whose
     rounding error fits the remaining ``(1 - rho) * e_a``.
+
+    ``degree``/``budget_bytes`` hand the plan to the unified design-space
+    planner (``core.design``): ``degree > 1`` or a byte budget returns the
+    planner's cheapest feasible :class:`~repro.core.design.PolyMember` for
+    this function instead of a linear :class:`QuantMember` — same memo table,
+    wider key.  ``dtype`` still restricts the storage-width menu there.
 
     ``dtype='auto'`` tries int8 and int16 (each with its own quantization
     refinement) and keeps the one minimizing ENTRY-STORAGE bytes, tie-broken
@@ -361,16 +369,39 @@ def plan_quant_member(
     quantized pack, and packs/tests re-request the same members.
     """
     if isinstance(fn, str):
-        return _plan_cached(fn, e_a, lo, hi, algorithm, omega, rho, dtype, cap)
-    return _plan(fn, e_a, lo, hi, algorithm, omega, rho, dtype, cap)
+        return _plan_cached(fn, e_a, lo, hi, algorithm, omega, rho, dtype,
+                            cap, degree, budget_bytes)
+    return _plan(fn, e_a, lo, hi, algorithm, omega, rho, dtype, cap,
+                 degree, budget_bytes)
 
 
 @lru_cache(maxsize=256)
-def _plan_cached(name, e_a, lo, hi, algorithm, omega, rho, dtype, cap):
-    return _plan(name, e_a, lo, hi, algorithm, omega, rho, dtype, cap)
+def _plan_cached(name, e_a, lo, hi, algorithm, omega, rho, dtype, cap,
+                 degree=1, budget_bytes=None):
+    return _plan(name, e_a, lo, hi, algorithm, omega, rho, dtype, cap,
+                 degree, budget_bytes)
 
 
-def _plan(fn, e_a, lo, hi, algorithm, omega, rho, dtype, cap) -> QuantMember:
+def _plan(fn, e_a, lo, hi, algorithm, omega, rho, dtype, cap,
+          degree=1, budget_bytes=None) -> QuantMember:
+    if degree != 1 or budget_bytes is not None:
+        # the unified planner owns the widened design space (deferred import:
+        # design imports this module's budget helpers at module level)
+        from . import design
+
+        name = fn if isinstance(fn, str) else fn.name
+        dtypes = design.POLY_DTYPES if dtype == "auto" else (
+            {"int8": ("int8",), "int16": ("int16",)}[dtype])
+        cands = design.enumerate_candidates(
+            name, e_a, degrees=(degree,) if degree != 1 else design.POLY_DEGREES,
+            dtypes=dtypes, algorithm=algorithm, omega=omega, rho=rho, cap=cap,
+            lo=lo, hi=hi)
+        best = min(cands, key=design._auto_key)
+        if budget_bytes is not None and best.total_bytes > budget_bytes:
+            raise ValueError(
+                f"member budget {budget_bytes} B infeasible for {name!r}: "
+                f"cheapest candidate needs {best.total_bytes} B")
+        return best.member
     if not (0.0 < rho < 1.0):
         raise ValueError("rho must be in (0, 1)")
     if dtype not in ("auto", "int8", "int16"):

@@ -5,12 +5,15 @@ from __future__ import annotations
 import jax
 
 from repro.approx.jax_table import JaxTable
-from repro.approx.table_pack import QuantTablePack, TablePack
+from repro.approx.table_pack import PolyTablePack, QuantTablePack, TablePack
 
 from .routed_pack_lookup import (routed_pack_lookup_pallas,
+                                 routed_poly_pack_lookup_pallas,
                                  routed_quant_pack_lookup_pallas)
 from .table_lookup import table_lookup_pallas
-from .table_pack_lookup import quant_pack_lookup_pallas, table_pack_lookup_pallas
+from .table_pack_lookup import (poly_pack_lookup_pallas,
+                                quant_pack_lookup_pallas,
+                                table_pack_lookup_pallas)
 
 
 def table_lookup(jt: JaxTable, x: jax.Array, *, extrapolate: bool = False) -> jax.Array:
@@ -45,6 +48,18 @@ def quant_pack_lookup(pack: QuantTablePack, fn, x: jax.Array, *,
     return quant_pack_lookup_pallas(pack, fn, x, extrapolate=extrapolate)
 
 
+def poly_pack_lookup(pack: PolyTablePack, fn, x: jax.Array, *,
+                     extrapolate: bool = False) -> jax.Array:
+    """Fused Horner lookup of member ``fn`` from the planner-built pack.
+
+    Members may mix degrees (1..3) and code widths (f32/int16/int8) in one
+    artifact; the kernel evaluates a uniform max-lanes Horner whose padded
+    lanes dequantize to exactly 0.  Differentiability lives in
+    ``repro.approx.make_poly_pack_fn``.
+    """
+    return poly_pack_lookup_pallas(pack, fn, x, extrapolate=extrapolate)
+
+
 def routed_pack_lookup(pack: TablePack, fn_ids, x: jax.Array, *,
                        extrapolate=False) -> jax.Array:
     """DYNAMIC per-row dispatch: row i of ``x`` through member ``fn_ids[i]``.
@@ -62,3 +77,11 @@ def routed_quant_pack_lookup(pack: QuantTablePack, fn_ids, x: jax.Array, *,
     width-group select per row)."""
     return routed_quant_pack_lookup_pallas(pack, fn_ids, x,
                                            extrapolate=extrapolate)
+
+
+def routed_poly_pack_lookup(pack: PolyTablePack, fn_ids, x: jax.Array, *,
+                            extrapolate=False) -> jax.Array:
+    """Routed dispatch over the planner-built pack (dynamic per-row degree,
+    code-width group, AND stride select)."""
+    return routed_poly_pack_lookup_pallas(pack, fn_ids, x,
+                                          extrapolate=extrapolate)

@@ -42,8 +42,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.approx.table_pack import (QuantTablePack, ShardedTablePack,
-                                     TablePack, resolve_fn_ids,
+from repro.approx.table_pack import (PolyTablePack, QuantTablePack,
+                                     ShardedTablePack, TablePack, poly_horner,
+                                     poly_horner_d1, resolve_fn_ids,
                                      routed_extr_flags)
 
 DEFAULT_BLOCK_COLS = 65536  # (1, 65536) f32 tile = 256 KiB in + 256 KiB out
@@ -572,3 +573,207 @@ def sharded_routed_pack_grad_pallas(
     """Routed sharded (y, dy/dx) — per-shard fused passes, summed."""
     return _sharded_routed_sum(pack, fn_ids, x, extrapolate, block_cols,
                                interpret, grad=True)
+
+
+# --------------------------------------------------------------------------------------
+# PolyTablePack: routed Horner over lane-padded mixed-degree / mixed-width cells.
+# --------------------------------------------------------------------------------------
+#
+# Same prefetch dispatch as the quant routed kernels, with two extra runtime
+# scalars per member: ``stride`` (= degree+1, the cell width in the code
+# vectors) and a THREE-way width-group select (int8 / int16 / raw f32).  Every
+# row runs a uniform ``lmax``-lane Horner: padded metadata lanes dequantize to
+# exactly 0.0, and leading zero coefficients pass through Horner as
+# ``0*t + c = c``, so the uniform loop is bit-identical to each member's own
+# degree-L evaluation.
+
+
+def _routed_poly_select(x, bounds, invd, base, segs, bo, lo, nf, n_max: int):
+    """Masked comparator over the fid's lane segment + four selector gathers
+    (the quant select minus the single-lane dequant params — poly dequant is
+    per LANE and happens in the coefficient loop)."""
+    m = jax.lax.broadcasted_iota(jnp.int32, (1, n_max), 1) + 1  # (1, n_max)
+    bvals = jnp.take(bounds, bo + m[0], axis=0, mode="clip")  # (n_max,)
+    cmp = (x[..., None] >= bvals) & (m[0] <= nf)
+    ju = jnp.sum(cmp.astype(jnp.int32), axis=-1)
+    j = jnp.minimum(ju, nf - 1)
+    p = jnp.take(bounds, bo + j, axis=0, mode="clip")
+    gl = lo + j
+    return (ju, gl, p,
+            jnp.take(invd, gl, axis=0, mode="clip"),
+            jnp.take(base, gl, axis=0, mode="clip"),
+            jnp.take(segs, gl, axis=0, mode="clip"))
+
+
+def _gather_poly_codes(codes8_ref, codes16_ref, codes32_ref, a, bits):
+    """Gather from all THREE width groups, live one selected per row (the
+    static kernel's python-time ``codes_for(fid)`` made dynamic; f32 members
+    store raw coefficients, so the 32-bit group needs no cast)."""
+    c8 = jnp.take(codes8_ref[0, :], a, axis=0, mode="clip").astype(jnp.float32)
+    c16 = jnp.take(codes16_ref[0, :], a, axis=0,
+                   mode="clip").astype(jnp.float32)
+    c32 = jnp.take(codes32_ref[0, :], a, axis=0, mode="clip")
+    return jnp.where(bits == 8, c8, jnp.where(bits == 16, c16, c32))
+
+
+def _routed_poly_coeffs(gl, i, base, bits, stride_f, zero_ref, ramp_ref,
+                        scale_ref, codes8_ref, codes16_ref, codes32_ref, *,
+                        lmax: int):
+    """Uniform ``lmax`` lane-padded coefficient gather + dequant.
+
+    Metadata lane l of global member cell ``gl`` lives at flat
+    ``gl*lmax + l``; code lane l of sub-interval i at ``base + i*stride + l``
+    (addresses past a member's real cell may alias neighbours, but the padded
+    lane's (zero, ramp, scale) = (0, 0, 0) dequantizes them to exactly 0.0).
+    """
+    cs = []
+    for l in range(lmax):
+        gm = gl * lmax + l
+        zl = jnp.take(zero_ref[0, :], gm, axis=0, mode="clip")
+        rl = jnp.take(ramp_ref[0, :], gm, axis=0, mode="clip")
+        sl = jnp.take(scale_ref[0, :], gm, axis=0, mode="clip")
+        a = (base + i * stride_f + float(l)).astype(jnp.int32)
+        q = _gather_poly_codes(codes8_ref, codes16_ref, codes32_ref, a, bits)
+        cs.append((zl + rl * i) + sl * q)
+    return cs
+
+
+def _routed_poly_kernel(ids_ref, n_ref, extr_ref, bo_ref, lo_ref, bits_ref,
+                        stride_ref, x_ref, bounds_ref, invd_ref, base_ref,
+                        segs_ref, zero_ref, ramp_ref, scale_ref, codes8_ref,
+                        codes16_ref, codes32_ref, o_ref, *, n_max: int,
+                        lmax: int):
+    r = pl.program_id(0)
+    fid = ids_ref[r]
+    nf, extr = n_ref[fid], extr_ref[fid]
+    bo, lo, bits = bo_ref[fid], lo_ref[fid], bits_ref[fid]
+    stride_f = stride_ref[fid].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+
+    _, gl, p, invd, base, segs = _routed_poly_select(
+        x, bounds_ref[0, :], invd_ref[0, :], base_ref[0, :], segs_ref[0, :],
+        bo, lo, nf, n_max)
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    cs = _routed_poly_coeffs(gl, i, base, bits, stride_f, zero_ref, ramp_ref,
+                             scale_ref, codes8_ref, codes16_ref, codes32_ref,
+                             lmax=lmax)
+
+    t = u - i
+    tc = jnp.clip(t, 0.0, 1.0)
+    y = poly_horner(cs, tc)
+    ye = y + poly_horner_d1(cs, tc) * (t - tc)
+    o_ref[...] = jnp.where(extr > 0, ye, y).astype(o_ref.dtype)
+
+
+def _routed_poly_grad_kernel(ids_ref, n_ref, extr_ref, bo_ref, lo_ref,
+                             bits_ref, stride_ref, x_ref, bounds_ref, invd_ref,
+                             base_ref, segs_ref, zero_ref, ramp_ref, scale_ref,
+                             codes8_ref, codes16_ref, codes32_ref, y_ref,
+                             dy_ref, *, n_max: int, lmax: int):
+    r = pl.program_id(0)
+    fid = ids_ref[r]
+    nf, extr = n_ref[fid], extr_ref[fid]
+    bo, lo, bits = bo_ref[fid], lo_ref[fid], bits_ref[fid]
+    stride_f = stride_ref[fid].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+
+    bounds = bounds_ref[0, :]
+    ju, gl, p, invd, base, segs = _routed_poly_select(
+        x, bounds, invd_ref[0, :], base_ref[0, :], segs_ref[0, :],
+        bo, lo, nf, n_max)
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    cs = _routed_poly_coeffs(gl, i, base, bits, stride_f, zero_ref, ramp_ref,
+                             scale_ref, codes8_ref, codes16_ref, codes32_ref,
+                             lmax=lmax)
+
+    t = u - i
+    tc = jnp.clip(t, 0.0, 1.0)
+    y = poly_horner(cs, tc)
+    g = poly_horner_d1(cs, tc)
+    slope = g * invd
+    p0 = jnp.take(bounds, bo, axis=0, mode="clip")
+    inside = ((x >= p0) & (ju < nf)).astype(jnp.float32)
+    y_ref[...] = jnp.where(extr > 0, y + g * (t - tc), y).astype(y_ref.dtype)
+    dy_ref[...] = jnp.where(extr > 0, slope, slope * inside).astype(dy_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols", "interpret",
+                                             "n_max", "lmax", "grad"))
+def _routed_poly_call(ids, n_arr, extr_arr, bo_arr, lo_arr, bits_arr,
+                      stride_arr, x2d, bounds, invd, base, segs, zero, ramp,
+                      scale, codes8, codes16, codes32, *, block_cols,
+                      interpret, n_max, lmax, grad):
+    operands = (bounds, invd, base, segs, zero, ramp, scale, codes8, codes16,
+                codes32)
+    n_outs = 2 if grad else 1
+    grid_spec = _routed_grid_spec(
+        x2d, n_max, None, block_cols, n_outs, num_scalars=7, pinned_meta=True,
+        extra_pinned=[a.shape for a in operands])
+    kernel = functools.partial(
+        _routed_poly_grad_kernel if grad else _routed_poly_kernel,
+        n_max=n_max, lmax=lmax)
+    out_shape = jax.ShapeDtypeStruct(x2d.shape, x2d.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape if not grad else [out_shape] * 2,
+        interpret=interpret,
+    )(ids, n_arr, extr_arr, bo_arr, lo_arr, bits_arr, stride_arr, x2d,
+      *operands)
+
+
+def _poly_routed_args(pack: PolyTablePack):
+    scalars = tuple(jnp.asarray(s) for s in pack.routing_scalars())
+    operands = (pack.boundaries.reshape(1, -1), pack.inv_delta.reshape(1, -1),
+                pack.base.reshape(1, -1), pack.seg_count.reshape(1, -1),
+                pack.zero.reshape(1, -1), pack.ramp.reshape(1, -1),
+                pack.scale.reshape(1, -1), pack.codes8.reshape(1, -1),
+                pack.codes16.reshape(1, -1), pack.codes32.reshape(1, -1))
+    n_max = int(np.max(pack.n_intervals))
+    return scalars, operands, n_max
+
+
+def routed_poly_pack_lookup_pallas(
+    pack: PolyTablePack,
+    fn_ids,
+    x: jax.Array,
+    *,
+    extrapolate=False,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Routed Horner-on-read: row i through planner-chosen member fn_ids[i]."""
+    x2d, block, c, ids, extr, interpret = _routed_prep(
+        pack, fn_ids, x, extrapolate, block_cols, interpret)
+    (n_arr, bo_arr, lo_arr, bits_arr, stride_arr), operands, n_max = \
+        _poly_routed_args(pack)
+    out = _routed_poly_call(
+        ids, n_arr, extr, bo_arr, lo_arr, bits_arr, stride_arr, x2d, *operands,
+        block_cols=block, interpret=interpret, n_max=n_max,
+        lmax=pack.max_lanes, grad=False)
+    return _untile_rows(out, c, x.shape)
+
+
+def routed_poly_pack_grad_pallas(
+    pack: PolyTablePack,
+    fn_ids,
+    x: jax.Array,
+    *,
+    extrapolate=False,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+    interpret: bool | None = None,
+):
+    """Routed poly (y, dy/dx) in one fused selector + Horner pass per row."""
+    x2d, block, c, ids, extr, interpret = _routed_prep(
+        pack, fn_ids, x, extrapolate, block_cols, interpret)
+    (n_arr, bo_arr, lo_arr, bits_arr, stride_arr), operands, n_max = \
+        _poly_routed_args(pack)
+    y2d, dy2d = _routed_poly_call(
+        ids, n_arr, extr, bo_arr, lo_arr, bits_arr, stride_arr, x2d, *operands,
+        block_cols=block, interpret=interpret, n_max=n_max,
+        lmax=pack.max_lanes, grad=True)
+    return _untile_rows(y2d, c, x.shape), _untile_rows(dy2d, c, x.shape)

@@ -28,8 +28,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.approx.table_pack import (QuantTablePack, ShardedTablePack,
-                                     TablePack)
+from repro.approx.table_pack import (PolyTablePack, QuantTablePack,
+                                     ShardedTablePack, TablePack, poly_horner,
+                                     poly_horner_d1)
 
 from .table_lookup import (DEFAULT_BLOCK_ROWS, LANE, _pinned, select_interval,
                            select_params, tile_activations, untile_activations)
@@ -360,6 +361,199 @@ def table_pack_grad_pallas(
         pack.values.reshape(1, -1),
         block_rows=block, interpret=interpret, fn_id=fid,
         n_intervals=pack.n_intervals[fid], extrapolate=extrapolate,
+    )
+    return (untile_activations(y2d, n, x.shape),
+            untile_activations(dy2d, n, x.shape))
+
+
+# --------------------------------------------------------------------------------------
+# PolyPack kernels — degree-d coefficient codes VMEM-resident, dequant + Horner on read.
+# --------------------------------------------------------------------------------------
+#
+# The polynomial pack generalizes the quant kernel from 2 chord endpoints to
+# ``degree + 1`` monomial coefficients per cell: each lane is gathered from the
+# member's width group (int8 / int16 codes or raw f32 coefficients — the f32
+# members ride the SAME dequant FMA with zero = ramp = 0, scale = 1, a bit-exact
+# identity) at ``base + i*(degree+1) + l``, dequantized per lane, and combined
+# by Horner at the clamped cell coordinate.  ``extrapolate=True`` continues past
+# the grid along the tangent: ``y = p(tc) + p'(tc) * (t - tc)``.  The dequant
+# planes are lane-padded flat lanes (stride ``lmax = max_degree + 1``); the
+# static fid bakes the member's degree, so only its real lanes are touched here
+# (the routed kernel runs all lmax lanes — identical bits, see
+# ``repro.core.packing.PolyPackLayout``).
+
+
+def _poly_select(x, bounds_ref, invd_ref, base_ref, segs_ref, *, bo: int,
+                 lo: int, n: int):
+    """Comparator plane + four selector gathers from member (bo, lo, n)."""
+    brow = bounds_ref[0, bo : bo + n + 1]
+    j = select_interval(brow, n, x)
+    p = jnp.take(brow, j, axis=0, mode="clip")
+    invd = jnp.take(invd_ref[0, lo : lo + n], j, axis=0, mode="clip")
+    base = jnp.take(base_ref[0, lo : lo + n], j, axis=0, mode="clip")
+    segs = jnp.take(segs_ref[0, lo : lo + n], j, axis=0, mode="clip")
+    return j, p, invd, base, segs
+
+
+def _poly_coeffs_kernel(j, i, base, zero_ref, ramp_ref, scale_ref, codes_ref,
+                        *, lo: int, n: int, lmax: int, degree: int):
+    """Gather + dequantize the cell's ``degree + 1`` coefficient lanes."""
+    codes = codes_ref[0, :]
+    stride = float(degree + 1)
+    cs = []
+    for l in range(degree + 1):
+        m = j * lmax + l  # flat (sub-interval, lane) metadata index
+        zl = jnp.take(zero_ref[0, lo * lmax : (lo + n) * lmax], m, axis=0,
+                      mode="clip")
+        rl = jnp.take(ramp_ref[0, lo * lmax : (lo + n) * lmax], m, axis=0,
+                      mode="clip")
+        sl = jnp.take(scale_ref[0, lo * lmax : (lo + n) * lmax], m, axis=0,
+                      mode="clip")
+        a = (base + i * stride + float(l)).astype(jnp.int32)
+        q = jnp.take(codes, a, axis=0, mode="clip").astype(jnp.float32)
+        cs.append((zl + rl * i) + sl * q)
+    return cs
+
+
+def _poly_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref, zero_ref,
+                 ramp_ref, scale_ref, codes_ref, o_ref, *, bo: int, lo: int,
+                 n_intervals: int, lmax: int, degree: int, extrapolate: bool):
+    x = x_ref[...].astype(jnp.float32)
+    j, p, invd, base, segs = _poly_select(
+        x, bounds_ref, invd_ref, base_ref, segs_ref, bo=bo, lo=lo,
+        n=n_intervals)
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    cs = _poly_coeffs_kernel(j, i, base, zero_ref, ramp_ref, scale_ref,
+                             codes_ref, lo=lo, n=n_intervals, lmax=lmax,
+                             degree=degree)
+    t = u - i
+    tc = jnp.clip(t, 0.0, 1.0)
+    y = poly_horner(cs, tc)
+    if extrapolate:
+        y = y + poly_horner_d1(cs, tc) * (t - tc)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _poly_grad_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref,
+                      zero_ref, ramp_ref, scale_ref, codes_ref, y_ref, dy_ref,
+                      *, bo: int, lo: int, n_intervals: int, lmax: int,
+                      degree: int, extrapolate: bool):
+    x = x_ref[...].astype(jnp.float32)
+    j, p, invd, base, segs = _poly_select(
+        x, bounds_ref, invd_ref, base_ref, segs_ref, bo=bo, lo=lo,
+        n=n_intervals)
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    cs = _poly_coeffs_kernel(j, i, base, zero_ref, ramp_ref, scale_ref,
+                             codes_ref, lo=lo, n=n_intervals, lmax=lmax,
+                             degree=degree)
+    t = u - i
+    tc = jnp.clip(t, 0.0, 1.0)
+    y = poly_horner(cs, tc)
+    g = poly_horner_d1(cs, tc)
+    slope = g * invd
+    if extrapolate:
+        y = y + g * (t - tc)
+    else:
+        inside = ((x >= bounds_ref[0, bo]) &
+                  (x < bounds_ref[0, bo + n_intervals])).astype(jnp.float32)
+        slope = slope * inside
+    y_ref[...] = y.astype(y_ref.dtype)
+    dy_ref[...] = slope.astype(dy_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "bo", "lo",
+                              "n_intervals", "lmax", "degree", "extrapolate"))
+def _poly_call(x2d, bounds, invd, base, segs, zero, ramp, scale, codes, *,
+               block_rows, interpret, bo, lo, n_intervals, lmax, degree,
+               extrapolate):
+    operands = (bounds, invd, base, segs, zero, ramp, scale, codes)
+    grid, in_specs = _pack_specs(x2d, operands, block_rows)
+    kernel = functools.partial(_poly_kernel, bo=bo, lo=lo,
+                               n_intervals=n_intervals, lmax=lmax,
+                               degree=degree, extrapolate=extrapolate)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_rows, x2d.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, *operands)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "bo", "lo",
+                              "n_intervals", "lmax", "degree", "extrapolate"))
+def _poly_call_grad(x2d, bounds, invd, base, segs, zero, ramp, scale, codes,
+                    *, block_rows, interpret, bo, lo, n_intervals, lmax,
+                    degree, extrapolate):
+    operands = (bounds, invd, base, segs, zero, ramp, scale, codes)
+    grid, in_specs = _pack_specs(x2d, operands, block_rows)
+    kernel = functools.partial(_poly_grad_kernel, bo=bo, lo=lo,
+                               n_intervals=n_intervals, lmax=lmax,
+                               degree=degree, extrapolate=extrapolate)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((block_rows, x2d.shape[1]), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct(x2d.shape, x2d.dtype)] * 2,
+        interpret=interpret,
+    )(x2d, *operands)
+
+
+def _poly_operands(pack: PolyTablePack, fid: int):
+    return (pack.boundaries.reshape(1, -1), pack.inv_delta.reshape(1, -1),
+            pack.base.reshape(1, -1), pack.seg_count.reshape(1, -1),
+            pack.zero.reshape(1, -1), pack.ramp.reshape(1, -1),
+            pack.scale.reshape(1, -1), pack.codes_for(fid).reshape(1, -1))
+
+
+def poly_pack_lookup_pallas(
+    pack: PolyTablePack,
+    fn,
+    x: jax.Array,
+    *,
+    extrapolate: bool = False,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Evaluate member ``fn`` from the polynomial pack (dequant + Horner)."""
+    fid, x2d, block, n, interpret = _prep(pack, fn, x, lane, block_rows,
+                                          interpret)
+    out = _poly_call(
+        x2d, *_poly_operands(pack, fid),
+        block_rows=block, interpret=interpret, bo=pack.bounds_offset(fid),
+        lo=pack.lane_offset(fid), n_intervals=pack.n_intervals[fid],
+        lmax=pack.max_lanes, degree=pack.degrees[fid], extrapolate=extrapolate,
+    )
+    return untile_activations(out, n, x.shape)
+
+
+def poly_pack_grad_pallas(
+    pack: PolyTablePack,
+    fn,
+    x: jax.Array,
+    *,
+    extrapolate: bool = False,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+):
+    """Returns (y, dy/dx) from the polynomial pack in one fused selector pass."""
+    fid, x2d, block, n, interpret = _prep(pack, fn, x, lane, block_rows,
+                                          interpret)
+    y2d, dy2d = _poly_call_grad(
+        x2d, *_poly_operands(pack, fid),
+        block_rows=block, interpret=interpret, bo=pack.bounds_offset(fid),
+        lo=pack.lane_offset(fid), n_intervals=pack.n_intervals[fid],
+        lmax=pack.max_lanes, degree=pack.degrees[fid], extrapolate=extrapolate,
     )
     return (untile_activations(y2d, n, x.shape),
             untile_activations(dy2d, n, x.shape))

@@ -41,7 +41,9 @@ def main():
                     help="nonlinearity backend; table_pack = one fused "
                          "multi-function pack + kernel for the whole network, "
                          "quant_pack = the same pack with int8/int16 entries "
-                         "dequantized on read, routed_* = the same packs with "
+                         "dequantized on read, poly_pack = the Pareto-planned "
+                         "pack (degree-1..3 Horner cells, mixed widths; see "
+                         "--pack-budget), routed_* = the same packs with "
                          "dynamic per-row fn_id dispatch (one executable for "
                          "every member), sharded_pack = the pack's values "
                          "split over the mesh 'model' axis (per-shard base "
@@ -52,6 +54,11 @@ def main():
                     help="sharded_pack modes: split the pack values this many "
                          "ways (distributes when a mesh binds a matching "
                          "'model' axis; otherwise a stacked-shard sum)")
+    ap.add_argument("--pack-budget", type=int, default=None,
+                    help="poly_pack modes: total-bytes budget for the design-"
+                         "space planner (greedy member downgrade until the "
+                         "pack fits; default keeps each function's Pareto-"
+                         "cheapest candidate)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -64,7 +71,7 @@ def main():
 
         cfg = reduced(args.arch)
     if (args.approx_mode is not None or args.approx_ea is not None
-            or args.pack_shards is not None):
+            or args.pack_shards is not None or args.pack_budget is not None):
         import dataclasses
 
         # override only what was passed; keep the config's other approx params
@@ -75,6 +82,8 @@ def main():
             kw["e_a"] = args.approx_ea
         if args.pack_shards is not None:
             kw["pack_shards"] = args.pack_shards
+        if args.pack_budget is not None:
+            kw["pack_budget"] = args.pack_budget
         cfg = cfg.replace(approx=dataclasses.replace(cfg.approx, **kw))
     model = build_model(cfg)
     params = model.init(jax.random.key(0))

@@ -31,7 +31,18 @@ def get_config(arch_id: str) -> ArchConfig:
     return mod.CONFIG
 
 
-def build_model(cfg: ArchConfig):
+def build_model(cfg: ArchConfig, mesh=None):
+    """Construct the family's model for ``cfg``.
+
+    ``mesh`` (default: the active ``use_sharding`` mesh, if any) pre-places
+    sharded-mode approx packs over the mesh BEFORE the constructors build
+    their activation closures, so each 'model' core captures its one values
+    slice and step 0 pays no pack reshard (see ``ApproxConfig.place_packs``).
+    """
+    if mesh is None:
+        from repro.parallel.sharding import current_mesh
+        mesh = current_mesh()
+    cfg.approx.place_packs(mesh)
     family = cfg.family
     if family in ("dense", MOE):
         return DecoderLM(cfg)

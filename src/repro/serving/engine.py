@@ -97,6 +97,20 @@ class _EngineBase:
                 for name, fn in self._executables.items()}
 
 
+def _place_engine_packs(model, mesh) -> None:
+    """Pre-place the model's sharded approx pack before jitting the engine
+    executables (``ApproxConfig.place_packs``): idempotent when
+    ``build_model(cfg, mesh=...)`` already placed it, and covers engines whose
+    mesh only exists at serve time — packs requested after this call capture
+    per-core slices instead of paying a first-dispatch reshard."""
+    if mesh is None:
+        from repro.parallel.sharding import current_mesh
+        mesh = current_mesh()
+    approx = getattr(getattr(model, "cfg", None), "approx", None)
+    if approx is not None:
+        approx.place_packs(mesh)
+
+
 def _check_engine_batch(engine, batch_size: int) -> None:
     if engine.B != batch_size:
         raise ValueError(f"engine batch size {engine.B} != requested "
@@ -108,13 +122,14 @@ class DecodeEngine(_EngineBase):
     """Fixed-batch prefill + decode (the static scheduler's inner engine)."""
 
     def __init__(self, model, params, batch_size: int, cache_len: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0, mesh=None):
         self.model = model
         self.params = params
         self.B = batch_size
         self.cache_len = cache_len
         self.temperature = temperature
         self.key = jax.random.key(seed)
+        _place_engine_packs(model, mesh)
         self._prefill = jax.jit(model.prefill)
         self._step = jax.jit(model.decode_step)
         self._executables = {"prefill": self._prefill,
@@ -284,7 +299,8 @@ class ContinuousEngine(_EngineBase):
 
     def __init__(self, model, params, batch_size: int, cache_len: int,
                  temperature: float = 0.0, seed: int = 0,
-                 prefill_len: Optional[int] = None, pad_id: int = 0):
+                 prefill_len: Optional[int] = None, pad_id: int = 0,
+                 mesh=None):
         self.model = model
         self.params = params
         self.B = batch_size
@@ -293,6 +309,7 @@ class ContinuousEngine(_EngineBase):
         self.key = jax.random.key(seed)
         self.prefill_len = prefill_len
         self.pad_id = pad_id
+        _place_engine_packs(model, mesh)
         self._prefill = jax.jit(model.prefill)
 
         # One fused executable per decode tick: step + greedy argmax + clock

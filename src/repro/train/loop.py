@@ -164,6 +164,12 @@ def run(model, shape, cfg: TrainConfig, mesh=None,
     data = SyntheticLM(data_config_for(model.cfg, shape))
     ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.ckpt_keep)
     if mesh is not None:
+        # sharded-mode approx packs: make sure each 'model' core holds its
+        # values slice before the step jits (idempotent when build_model
+        # already placed them under this mesh)
+        approx = getattr(model.cfg, "approx", None)
+        if approx is not None:
+            approx.place_packs(mesh)
         wspecs = shardings_from_specs(mesh, work_pspecs(model, mesh))
         mspecs_tree = shardings_from_specs(
             mesh, zero1_pspecs(model.abstract_params(), mesh))

@@ -19,12 +19,16 @@ from repro.approx import TABLE_MODES, ApproxConfig, from_quant_layout, from_spec
 from repro.approx.activations import _EXACT, _TABLE_NAME
 from repro.approx.jax_table import eval_table_ref, make_table_fn
 from repro.approx.table_pack import (
+    build_poly_pack,
     eval_pack_ref,
+    eval_poly_pack_ref,
     eval_quant_pack_ref,
+    eval_routed_poly_ref,
     eval_routed_quant_ref,
     eval_routed_ref,
     eval_sharded_ref,
     make_pack_fn,
+    make_poly_pack_fn,
     make_quant_pack_fn,
     make_routed_unary_fn,
     make_sharded_pack_fn,
@@ -36,14 +40,17 @@ from repro.core import (
     get_function,
     pack_layout,
     plan_quant_member,
+    poly_member,
     quant_pack_layout,
 )
 from repro.kernels.routed_pack_lookup import (
     routed_pack_lookup_pallas,
+    routed_poly_pack_lookup_pallas,
     routed_quant_pack_lookup_pallas,
 )
 from repro.kernels.table_lookup import table_lookup_pallas
 from repro.kernels.table_pack_lookup import (
+    poly_pack_lookup_pallas,
     quant_pack_lookup_pallas,
     sharded_pack_lookup_pallas,
     table_pack_lookup_pallas,
@@ -57,8 +64,10 @@ KERNEL_ORACLE = {
     "table_pallas": "table_ref",
     "table_pack": "table_pack_ref",
     "quant_pack": "quant_pack_ref",
+    "poly_pack": "poly_pack_ref",
     "routed_pack": "routed_pack_ref",
     "routed_quant_pack": "routed_quant_pack_ref",
+    "routed_poly_pack": "routed_poly_pack_ref",
     "sharded_pack": "sharded_pack_ref",
 }
 N_SHARDS = 2  # sharded modes: shard count for the conformance pack
@@ -89,6 +98,14 @@ def _qpack():
     return _CACHE["qpack"]
 
 
+def _ppack():
+    if "ppack" not in _CACHE:
+        # the design-space planner picks each function's Pareto-cheapest
+        # (degree, dtype); the returned pack mixes degrees and code widths
+        _CACHE["ppack"] = build_poly_pack(FUNCS, EA)
+    return _CACHE["ppack"]
+
+
 def _spack():
     if "spack" not in _CACHE:
         _CACHE["spack"] = shard_pack(
@@ -115,6 +132,10 @@ def approx_eval(mode: str, name: str, x: jnp.ndarray) -> np.ndarray:
         out = jax.jit(lambda v: eval_quant_pack_ref(_qpack(), name, v))(x)
     elif mode == "quant_pack":
         out = quant_pack_lookup_pallas(_qpack(), name, x)
+    elif mode == "poly_pack_ref":
+        out = jax.jit(lambda v: eval_poly_pack_ref(_ppack(), name, v))(x)
+    elif mode == "poly_pack":
+        out = poly_pack_lookup_pallas(_ppack(), name, x)
     elif mode == "routed_pack_ref":
         out = jax.jit(lambda v: eval_routed_ref(
             _pack(), name, _rows(v)))(x).reshape(x.shape)
@@ -127,6 +148,12 @@ def approx_eval(mode: str, name: str, x: jnp.ndarray) -> np.ndarray:
     elif mode == "routed_quant_pack":
         out = routed_quant_pack_lookup_pallas(_qpack(), name,
                                               _rows(x)).reshape(x.shape)
+    elif mode == "routed_poly_pack_ref":
+        out = jax.jit(lambda v: eval_routed_poly_ref(
+            _ppack(), name, _rows(v)))(x).reshape(x.shape)
+    elif mode == "routed_poly_pack":
+        out = routed_poly_pack_lookup_pallas(_ppack(), name,
+                                             _rows(x)).reshape(x.shape)
     elif mode == "sharded_pack_ref":
         out = jax.jit(lambda v: eval_sharded_ref(_spack(), name, v))(x)
     elif mode == "sharded_pack":
@@ -143,10 +170,17 @@ def approx_fn(mode: str, name: str):
                              use_pallas=(mode == "table_pallas"))
     pallas = not mode.endswith("_ref")
     if mode.startswith("routed"):
-        pack = _qpack() if "quant" in mode else _pack()
+        if "poly" in mode:
+            pack = _ppack()
+        elif "quant" in mode:
+            pack = _qpack()
+        else:
+            pack = _pack()
         return make_routed_unary_fn(pack, name, use_pallas=pallas)
     if mode.startswith("sharded"):
         return make_sharded_pack_fn(_spack(), name, use_pallas=pallas)
+    if mode.startswith("poly"):
+        return make_poly_pack_fn(_ppack(), name, use_pallas=pallas)
     if mode.startswith("quant"):
         return make_quant_pack_fn(_qpack(), name, use_pallas=pallas)
     return make_pack_fn(_pack(), name, use_pallas=pallas)
@@ -239,6 +273,12 @@ class TestDesignLayerF64:
     @pytest.mark.parametrize("name", FUNCS)
     def test_quant_member_bound(self, name):
         m = plan_quant_member(name, EA)
+        assert m.max_error_on_grid(n=20_001) <= EA * (1 + 1e-6)
+
+    @pytest.mark.parametrize("name", FUNCS)
+    def test_poly_member_bound(self, name):
+        """Degree-2 int16 members (the planner's workhorse point) meet Ea."""
+        m = poly_member(name, EA, degree=2, bits=16)
         assert m.max_error_on_grid(n=20_001) <= EA * (1 + 1e-6)
 
 

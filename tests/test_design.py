@@ -1,0 +1,179 @@
+"""Design-space planner (core.design): candidate enumeration, Pareto
+filtering, and budgeted selection — the layer every poly_pack artifact rides.
+
+The pinned regressions encode the PR's headline claim at Ea=1e-4: degree-2
+chord entries are strictly fewer than degree-1 entries on exp/tanh (the
+curvature-heavy members), and the planner's auto pick needs strictly fewer
+entries than the linear-f32 pack.  The hypothesis property drives
+``plan(budget)`` across random budgets and function subsets: every returned
+member meets Ea on a dense grid, and the plan's bytes fit the budget whenever
+one was given — the budget trades bytes for runtime cost, never accuracy.
+
+Profiles follow test_properties.py: ``ci`` (default) keeps examples small;
+``HYPOTHESIS_PROFILE=nightly`` widens the sweep.
+"""
+
+import os
+
+import pytest
+
+from repro.core import design, function_names
+from repro.core.design import enumerate_candidates, pareto_front, plan
+
+try:  # the property test widens under hypothesis; pinned cases always run
+    from hypothesis import given, settings, strategies as st
+
+    settings.register_profile("ci", max_examples=12, deadline=None)
+    settings.register_profile("nightly", max_examples=75, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAVE_HYPOTHESIS = False
+
+EA = 1e-4
+# small menu set: members are lru-cached, so only the first build pays
+NAMES = ("tanh", "exp_neg", "gelu", "sigmoid_sym")
+
+
+def _entries(cands, degree, dtype="f32"):
+    sel = [c.entries for c in cands if c.degree == degree and c.dtype == dtype]
+    assert sel, f"no degree-{degree} {dtype} candidate"
+    return min(sel)
+
+
+class TestCandidates:
+    def test_menu_covers_degrees_and_dtypes(self):
+        cands = enumerate_candidates("tanh", EA)
+        assert {c.degree for c in cands} == set(design.POLY_DEGREES)
+        # f32 is always feasible; integer codings may drop out per degree
+        assert "f32" in {c.dtype for c in cands}
+
+    def test_every_candidate_meets_ea(self):
+        for c in enumerate_candidates("gelu", EA):
+            assert c.member.max_error_on_grid(n=4001) <= EA * (1 + 1e-6), \
+                (c.degree, c.dtype)
+
+    def test_bad_dtype_rejected(self):
+        with pytest.raises(ValueError, match="dtype"):
+            enumerate_candidates("tanh", EA, dtypes=("int4",))
+
+
+class TestParetoFront:
+    def test_front_is_nondominated_and_sorted(self):
+        for name in ("tanh", "exp"):
+            front = pareto_front(enumerate_candidates(name, EA))
+            assert front
+            for a in front:
+                assert not any(
+                    o.entries <= a.entries and o.total_bytes <= a.total_bytes
+                    and (o.entries < a.entries or o.total_bytes < a.total_bytes)
+                    for o in front)
+            assert [c.entries for c in front] == sorted(
+                c.entries for c in front)
+
+    def test_front_subset_of_menu(self):
+        cands = enumerate_candidates("gelu", EA)
+        front = pareto_front(cands)
+        assert set(id(c) for c in front) <= set(id(c) for c in cands)
+
+
+class TestPinnedRegressions:
+    """Degree-2+ entries beat degree-1 at equal accuracy — the spacing rule's
+    h^(d+1) scaling made concrete on the curvature-heavy members."""
+
+    @pytest.mark.parametrize("name", ["exp", "tanh"])
+    def test_degree2_beats_degree1_entries(self, name):
+        cands = enumerate_candidates(name, EA)
+        assert _entries(cands, 2) < _entries(cands, 1), name
+
+    def test_planner_auto_beats_linear_f32_entries(self):
+        """The auto plan over the full registry needs strictly fewer entries
+        than one linear f32 member per function (the PR 2 pack baseline)."""
+        names = tuple(function_names())
+        p = plan(names, EA)
+        linear = sum(_entries(enumerate_candidates(n, EA), 1) for n in names)
+        assert p.total_entries < linear, (p.total_entries, linear)
+
+
+class TestPlan:
+    def test_no_budget_picks_cheapest(self):
+        p = plan(NAMES, EA)
+        for c in p.chosen:
+            menu = enumerate_candidates(c.name, EA)
+            assert c.total_bytes == min(m.total_bytes for m in menu)
+
+    def test_budget_respected_and_members_unchanged_accuracy(self):
+        p = plan(NAMES, EA, budget_bytes=8192)
+        assert p.total_bytes <= 8192
+        for m in p.members:
+            assert m.max_error_on_grid(n=4001) <= EA * (1 + 1e-6)
+
+    def test_generous_budget_keeps_preferred_quality(self):
+        """A budget the preferred plan already fits leaves every function at
+        its lowest-degree / widest-dtype candidate (no needless downgrade)."""
+        tight = plan(NAMES, EA).total_bytes
+        roomy = plan(NAMES, EA, budget_bytes=50 * tight)
+        for c in roomy.chosen:
+            menu = enumerate_candidates(c.name, EA)
+            pref = min(menu, key=design._preferred_key)
+            assert (c.degree, c.dtype) == (pref.degree, pref.dtype)
+
+    def test_infeasible_budget_raises(self):
+        with pytest.raises(ValueError, match="infeasible"):
+            plan(NAMES, EA, budget_bytes=8)
+
+    def test_empty_names_raises(self):
+        with pytest.raises(ValueError, match="at least one"):
+            plan((), EA)
+
+    def test_interval_override_shrinks_member(self):
+        full = plan(("tanh",), EA).total_entries
+        narrow = plan(("tanh",), EA,
+                      intervals={"tanh": (-2.0, 0.0)}).total_entries
+        assert narrow <= full
+
+    def test_vmem_accounting_runs(self):
+        v = plan(NAMES, EA).vmem()
+        assert v.padded_bytes >= v.table_bytes + v.meta_bytes > 0
+
+
+def _check_plan_contract(budget, subset):
+    """EVERY feasible plan honors both contracts at once: each member meets
+    Ea on a dense grid, and total codes+meta bytes fit the byte budget."""
+    names = tuple(sorted(subset))
+    try:
+        p = plan(names, EA, budget_bytes=budget)
+    except ValueError:
+        # infeasible budget: the cheapest plan itself exceeds it — legitimate
+        assert budget is not None
+        assert plan(names, EA).total_bytes > budget
+        return
+    assert p.names == names
+    if budget is not None:
+        assert p.total_bytes <= budget
+    for m in p.members:
+        assert m.max_error_on_grid(n=2001) <= EA * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("budget,subset", [
+    (None, NAMES),
+    (64, ("tanh",)),           # infeasibly tight
+    (600, ("tanh", "gelu")),   # forces downgrades
+    (2048, NAMES),
+    (8192, NAMES),
+    (20_000, ("exp_neg", "sigmoid_sym")),
+])
+def test_plan_contract_pinned(budget, subset):
+    _check_plan_contract(budget, subset)
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        budget=st.one_of(st.none(),
+                         st.integers(min_value=64, max_value=20_000)),
+        subset=st.sets(st.sampled_from(NAMES), min_size=1,
+                       max_size=len(NAMES)),
+    )
+    @settings(deadline=None)  # examples count from the ci/nightly profile
+    def test_plan_property_accuracy_and_budget(budget, subset):
+        _check_plan_contract(budget, subset)

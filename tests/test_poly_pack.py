@@ -1,0 +1,206 @@
+"""PolyTablePack: the planner-built runtime artifact and its Pallas kernels.
+
+What conformance doesn't already cover, checked here in detail:
+
+  * VALUE bit parity of the static and routed kernels against their jnp
+    oracles on mixed-degree / mixed-width packs (f32 + int8 + int16 members
+    sharing one pack), including per-row routed dispatch over mixed fn_ids;
+  * the lane-padding contract that makes those parities possible: a padded
+    metadata lane dequantizes to exactly 0.0, so the kernels' uniform
+    max-lanes Horner is bit-identical to each member's own degree-L Horner;
+  * fused-grad slopes: compared with tight allclose, NOT bitwise — the
+    derivative Horner step ``g*t + c*k`` has two products feeding one add,
+    and XLA's FMA-contraction choice legitimately differs between the fused
+    kernel module and the standalone slope oracle (a 1-ULP ambiguity; the
+    VALUE path has a unique contraction and stays bitwise);
+  * planner-budget plumbing through ApproxConfig.pack_budget.
+
+Oracles are jitted on both sides of every parity check — eager jnp rounds
+each op separately while XLA contracts the dequant FMA chains (the
+test_quant_pack.py convention).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx.activations import ApproxConfig
+from repro.approx.table_pack import (build_poly_pack, eval_poly_pack_ref,
+                                     eval_poly_pack_slope,
+                                     eval_routed_poly_ref,
+                                     eval_routed_poly_slope, from_poly_layout)
+from repro.core import poly_member, poly_pack_layout
+from repro.kernels.routed_pack_lookup import (routed_poly_pack_grad_pallas,
+                                              routed_poly_pack_lookup_pallas)
+from repro.kernels.table_pack_lookup import (poly_pack_grad_pallas,
+                                             poly_pack_lookup_pallas)
+
+EA = 1e-4
+AUTO_NAMES = ("gelu", "tanh", "exp_neg", "sigmoid_sym")
+# one member per degree x a different code width each — the adversarial pack
+MIXED = (("tanh", 1, 32), ("exp_neg", 3, 8), ("gelu", 2, 16))
+
+
+@pytest.fixture(scope="module")
+def auto_pack():
+    return build_poly_pack(AUTO_NAMES, EA)
+
+
+@pytest.fixture(scope="module")
+def mixed_pack():
+    members = [poly_member(n, EA, degree=d, bits=b) for n, d, b in MIXED]
+    return from_poly_layout(poly_pack_layout(members))
+
+
+def probe(rng, n=2100):
+    return jnp.asarray(rng.uniform(-9, 9, n).astype(np.float32))
+
+
+def _packs(auto_pack, mixed_pack):
+    return ((auto_pack, AUTO_NAMES), (mixed_pack, tuple(m[0] for m in MIXED)))
+
+
+class TestPackLayout:
+    def test_mixed_pack_statics(self, mixed_pack):
+        assert mixed_pack.degrees == tuple(m[1] for m in MIXED)
+        assert mixed_pack.entry_bits == (32, 8, 16)
+        assert mixed_pack.max_lanes == 4  # max degree 3 -> 4 coefficients
+
+    def test_padded_lanes_dequantize_to_exact_zero(self, mixed_pack):
+        """Lane l >= degree+1 of a member must have (zero, ramp, scale) all
+        exactly 0.0: the kernels' uniform-lane Horner then sees 0*t + c = c
+        through the padding, which is what makes the mixed-degree bit
+        parities below possible at all."""
+        lmax = mixed_pack.max_lanes
+        for fid, name in enumerate(mixed_pack.names):
+            lo = mixed_pack.lane_offset(fid)
+            n = mixed_pack.n_intervals[fid]
+            lanes = mixed_pack.degrees[fid] + 1
+            for plane in (mixed_pack.zero, mixed_pack.ramp, mixed_pack.scale):
+                rows = np.asarray(plane[lo * lmax:(lo + n) * lmax]
+                                  ).reshape(n, lmax)
+                np.testing.assert_array_equal(
+                    rows[:, lanes:], 0.0, err_msg=f"{name} padding")
+
+    def test_footprint_excludes_dummy_groups(self, mixed_pack, auto_pack):
+        """Empty code width groups hold a 1-entry jnp dummy for pallas
+        operand shapes; footprints must count only the LIVE groups."""
+        groups = {8: mixed_pack.codes8, 16: mixed_pack.codes16,
+                  32: mixed_pack.codes32}
+        live = set(mixed_pack.entry_bits)  # all three here
+        assert live == {8, 16, 32}
+        by_hand = sum(groups[b].size * (b // 8) for b in live)
+        assert mixed_pack.footprint_bytes == by_hand
+        assert mixed_pack.footprint == sum(groups[b].size for b in live)
+        # the auto pack leaves some group empty -> its dummy must not count
+        auto_live = set(auto_pack.entry_bits)
+        auto_groups = {8: auto_pack.codes8, 16: auto_pack.codes16,
+                       32: auto_pack.codes32}
+        assert auto_pack.footprint == sum(
+            auto_groups[b].size for b in auto_live)
+
+
+class TestStaticKernelParity:
+    @pytest.mark.parametrize("extrapolate", [False, True])
+    def test_value_bitwise(self, auto_pack, mixed_pack, extrapolate):
+        rng = np.random.default_rng(0)
+        for pack, names in _packs(auto_pack, mixed_pack):
+            x = probe(rng)
+            for name in names:
+                want = jax.jit(lambda v, n=name: eval_poly_pack_ref(
+                    pack, n, v, extrapolate=extrapolate))(x)
+                got = poly_pack_lookup_pallas(pack, name, x,
+                                              extrapolate=extrapolate)
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(want),
+                    err_msg=f"{name} extrapolate={extrapolate}")
+
+    @pytest.mark.parametrize("extrapolate", [False, True])
+    def test_fused_grad_value_bitwise_slope_close(self, auto_pack, mixed_pack,
+                                                  extrapolate):
+        rng = np.random.default_rng(1)
+        for pack, names in _packs(auto_pack, mixed_pack):
+            x = probe(rng)
+            for name in names:
+                y, dy = poly_pack_grad_pallas(pack, name, x,
+                                              extrapolate=extrapolate)
+                want_y = jax.jit(lambda v, n=name: eval_poly_pack_ref(
+                    pack, n, v, extrapolate=extrapolate))(x)
+                want_dy = jax.jit(lambda v, n=name: eval_poly_pack_slope(
+                    pack, n, v, extrapolate=extrapolate))(x)
+                np.testing.assert_array_equal(np.asarray(y),
+                                              np.asarray(want_y), err_msg=name)
+                # slope: tight allclose, not bitwise (see module docstring)
+                np.testing.assert_allclose(np.asarray(dy),
+                                           np.asarray(want_dy),
+                                           rtol=1e-5, atol=1e-7, err_msg=name)
+                assert np.isfinite(np.asarray(dy)).all()
+
+
+class TestRoutedKernelParity:
+    @pytest.mark.parametrize("extrapolate", [False, True])
+    def test_mixed_ids_bitwise(self, auto_pack, mixed_pack, extrapolate):
+        """Rows routed to DIFFERENT members in one call, kernel vs jitted
+        routed oracle — and each routed row vs the member's static oracle."""
+        rng = np.random.default_rng(2)
+        for pack, names in _packs(auto_pack, mixed_pack):
+            rows = 8
+            ids = np.array([i % len(names) for i in range(rows)], np.int32)
+            x = probe(rng, rows * 257).reshape(rows, 257)
+            want = jax.jit(lambda v: eval_routed_poly_ref(
+                pack, ids, v, extrapolate=extrapolate))(x)
+            got = routed_poly_pack_lookup_pallas(pack, ids, x,
+                                                 extrapolate=extrapolate)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            for r in range(rows):
+                srow = jax.jit(lambda v, n=names[ids[r]]: eval_poly_pack_ref(
+                    pack, n, v, extrapolate=extrapolate))(x[r])
+                np.testing.assert_array_equal(np.asarray(want[r]),
+                                              np.asarray(srow),
+                                              err_msg=f"row {r}")
+
+    def test_routed_grad(self, mixed_pack):
+        rng = np.random.default_rng(3)
+        names = tuple(m[0] for m in MIXED)
+        ids = np.array([2, 0, 1, 2, 1, 0], np.int32)
+        x = probe(rng, ids.size * 130).reshape(ids.size, 130)
+        y, dy = routed_poly_pack_grad_pallas(mixed_pack, ids, x)
+        want_y = jax.jit(lambda v: eval_routed_poly_ref(
+            mixed_pack, ids, v))(x)
+        want_dy = jax.jit(lambda v: eval_routed_poly_slope(
+            mixed_pack, ids, v))(x)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(want_y))
+        np.testing.assert_allclose(np.asarray(dy), np.asarray(want_dy),
+                                   rtol=1e-5, atol=1e-7)
+        assert np.isfinite(np.asarray(dy)).all()
+        assert names  # routed over every member above
+
+
+class TestExtrapolation:
+    def test_linear_tail(self, mixed_pack):
+        """extrapolate=True continues the edge cell's tangent line: gelu far
+        right must track the identity asymptote instead of saturating."""
+        y = poly_pack_lookup_pallas(
+            mixed_pack, "gelu", jnp.asarray([20.0], jnp.float32),
+            extrapolate=True)
+        assert abs(float(y[0]) - 20.0) < 0.05
+
+
+class TestApproxConfigBudget:
+    def test_pack_budget_plumbed_and_respected(self):
+        cfg = ApproxConfig(mode="poly_pack", e_a=EA, pack_budget=4096)
+        pack = cfg.poly_pack()
+        assert pack.footprint_bytes <= 4096
+        # distinct budgets are distinct cache keys -> distinct packs allowed
+        free = ApproxConfig(mode="poly_pack", e_a=EA).poly_pack()
+        assert free.names == pack.names
+
+    def test_unary_and_grad_through_config(self):
+        cfg = ApproxConfig(mode="poly_pack", e_a=EA)
+        f = cfg.unary("gelu")
+        x = jnp.linspace(-4, 4, 513, dtype=jnp.float32)[:-1]
+        err = float(jnp.max(jnp.abs(f(x) - jax.nn.gelu(x, approximate=False))))
+        assert err <= EA * 1.02 + 1e-5
+        g = jax.grad(lambda v: f(v).sum())(x)
+        assert bool(jnp.all(jnp.isfinite(g)))
