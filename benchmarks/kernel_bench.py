@@ -521,11 +521,27 @@ def serve_bench(modes=("exact", "table_pack"), n_requests: int = 8,
     queue long enough to trigger a refill (the refill gather/scatter ops are
     eager and XLA caches them per shape — the first single-slot refill pays
     their compiles), then counters reset before the timed run.
+
+    ScopeKit observability is enabled (host-side only) across the timed reps,
+    so each scheduler's dict gains ``latency``: TTFT and inter-token-latency
+    p50/p95/p99 in milliseconds, harvested from the engines' metric
+    histograms over all reps.  Both schedulers carry the same recording
+    overhead, so the continuous-vs-static gate is unaffected.
     """
+    from repro import obs
     from repro.approx import ApproxConfig
     from repro.models import build_model, get_config
     from repro.serving.engine import (ContinuousEngine, DecodeEngine, Request,
                                       serve_static)
+
+    def _latency_ms(engine) -> dict:
+        hists = engine.metrics.summary()["histograms"]
+        out = {}
+        for key, label in (("ttft_s", "ttft_ms"), ("itl_s", "itl_ms")):
+            s = hists.get(key) or {}
+            out[label] = {q: round(s[q] * 1e3, 3)
+                          for q in ("p50", "p95", "p99") if q in s}
+        return out
 
     rng = np.random.default_rng(5)
     prompt_len, cache_len, vocab = 8, 64, 128
@@ -561,14 +577,21 @@ def serve_bench(modes=("exact", "table_pack"), n_requests: int = 8,
         reps = 5
         t_s = t_c = float("inf")
         res_s = res_c = None
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            res_s = serve_static(model, params, reqs, batch, cache_len,
-                                 engine=stat)
-            t_s = min(t_s, time.perf_counter() - t0)
-            t0 = time.perf_counter()
-            res_c = cont.serve(reqs)
-            t_c = min(t_c, time.perf_counter() - t0)
+        prev_obs = obs.get_config()
+        obs.configure(enabled=True)  # host spans + TTFT/ITL histograms
+        try:
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                res_s = serve_static(model, params, reqs, batch, cache_len,
+                                     engine=stat)
+                t_s = min(t_s, time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                res_c = cont.serve(reqs)
+                t_c = min(t_c, time.perf_counter() - t0)
+        finally:
+            obs.configure(enabled=prev_obs.enabled,
+                          device_telemetry=prev_obs.device_telemetry,
+                          trace_path=prev_obs.trace_path)
         for eng in (stat, cont):
             eng.batch_steps //= reps
             eng.wasted_slot_steps //= reps
@@ -579,12 +602,14 @@ def serve_bench(modes=("exact", "table_pack"), n_requests: int = 8,
         m = {
             "static": {"tokens_per_s": round(useful_s / t_s, 1),
                        "tokens": useful_s, "batch_rounds": stat.batch_steps,
-                       "wasted_step_fraction": round(stat.wasted_fraction, 3)},
+                       "wasted_step_fraction": round(stat.wasted_fraction, 3),
+                       "latency": _latency_ms(stat)},
             "continuous": {"tokens_per_s": round(useful_c / t_c, 1),
                            "tokens": useful_c, "batch_rounds": cont.batch_steps,
                            "refills": cont.refills,
                            "wasted_step_fraction": round(cont.wasted_fraction,
-                                                         3)},
+                                                         3),
+                           "latency": _latency_ms(cont)},
             "speedup_continuous_vs_static": round(t_s / t_c, 2),
         }
         report["modes"][mode] = m

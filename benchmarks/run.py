@@ -20,10 +20,19 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale populations (slow)")
     ap.add_argument("--skip-fig6", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a ScopeKit Chrome-trace JSON of the bench run "
+                         "(design-phase + serve spans; open in Perfetto)")
     args = ap.parse_args()
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from benchmarks import kernel_bench, paper_figs
+
+    if args.trace:
+        from repro import obs
+
+        obs.configure(enabled=True, trace_path=args.trace)
+        obs.reset_tracer()
 
     t0 = time.time()
     rows = []
@@ -66,6 +75,13 @@ def main() -> None:
             print(f"[roofline] {len(rrows)} cells summarised -> {roofline.OUT_MD}")
     except FileNotFoundError:
         print("[roofline] no dry-run results yet (run repro.launch.dryrun)")
+
+    if args.trace:
+        from repro import obs
+
+        obs.get_tracer().save(
+            args.trace, metadata={"metrics": obs.get_registry().summary()})
+        print(f"[trace] written to {args.trace}")
 
     print(f"\n# total bench time: {time.time() - t0:.1f}s")
     print("name,value,derived")

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.approx import TABLE_MODES, ApproxConfig
 from repro.models import build_model, get_config
 from repro.models.common import routed_activation
@@ -65,11 +66,21 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--routed-demo", action="store_true",
                     help="run the per-slot routed-activation demo and exit")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a ScopeKit Chrome-trace JSON of the serve "
+                         "(open in Perfetto)")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable device-side approximation telemetry and "
+                         "print the metric summary")
     args = ap.parse_args()
 
     if args.routed_demo:
         routed_demo(args.mode)
         return
+
+    obs.configure(enabled=True, device_telemetry=args.obs,
+                  trace_path=args.trace)
+    obs.reset_tracer()
 
     cfg = get_config("gemma3-12b").replace(
         n_layers=6, d_model=128, n_heads=4, n_kv_heads=2, d_head=32, d_ff=256,
@@ -104,12 +115,28 @@ def main():
     # len(tokens), trimmed at that request's own EOS/budget — padded or
     # post-EOS slots don't inflate the number)
     total = sum(r.steps for r in results)
+    steady = max(dt - engine.compile_time_s, 1e-9)
     print(f"mode={args.mode}/{args.scheduler}: served {len(results)} requests "
-          f"/ {total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s, CPU); "
+          f"/ {total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s wall, "
+          f"{total / steady:.1f} tok/s steady after "
+          f"{engine.compile_time_s:.2f}s compile, CPU); "
           f"{engine.batch_steps} batch rounds, "
           f"wasted slot-step fraction {engine.wasted_fraction:.2f}")
     for i, r in enumerate(results[:3]):
         print(f"  req{i}: prompt={r.prompt_len} toks -> {r.tokens.tolist()}")
+    if args.obs:
+        import json
+
+        print(json.dumps({"metrics": obs.get_registry().summary(),
+                          "engine_metrics": engine.metrics.summary()},
+                         indent=1, default=str))
+    if args.trace:
+        obs.get_tracer().save(args.trace, metadata={
+            "metrics": {
+                "histograms": engine.metrics.summary()["histograms"],
+                "counters": obs.get_registry().summary()["counters"],
+            }})
+        print(f"trace written to {args.trace}")
     print("serve_decode OK")
 
 

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.flow import cached_table
 from repro.core.functions import get as get_function
 
@@ -39,7 +40,8 @@ from .table_pack import (PolyTablePack, QuantTablePack, ShardedTablePack,
                          build_quant_pack, build_sharded_pack, make_pack_fn,
                          make_poly_pack_fn, make_quant_pack_fn,
                          make_routed_fn, make_routed_unary_fn,
-                         make_sharded_pack_fn)
+                         make_sharded_pack_fn, member_domain,
+                         quant_saturation_counts)
 
 Mode = str  # "exact" | "table_ref" | "table_pallas" | "table_pack" |
 #             "table_pack_ref" | "quant_pack" | "quant_pack_ref" |
@@ -336,7 +338,59 @@ class ApproxConfig:
             # the registry table spans [-lo, 0): mirror it so gates/softcap get
             # the full symmetric domain (tanh(x) = -tanh(-|x|) * sign(x))
             f = odd_extension(f)
-        return f
+        return self._maybe_instrument_unary(f, name, reg_name)
+
+    def _maybe_instrument_unary(self, f, name: str, reg_name: str):
+        """Device-side approximation telemetry, decided at closure-BUILD time.
+
+        When ``obs.device_telemetry_enabled()`` at the moment ``unary`` builds
+        the callable, the activation is wrapped to count out-of-domain
+        clamp/extrapolation hits (and, on quant-backed packs, saturated
+        endpoint codes) into the global metrics registry via
+        ``jax.debug.callback``; the observed VALUES are untouched.  When off —
+        the default — ``f`` is returned as-is, so the traced jaxpr is
+        bit-identical to a build without ScopeKit and no extra executables
+        appear (the conformance/obs tests assert both).  Flipping the flag
+        after a model is built therefore has no effect on that model: rebuild
+        the closures to instrument them.
+        """
+        if not obs.device_telemetry_enabled():
+            return f
+        if self.mode in (PACK_MODES + QUANT_PACK_MODES + POLY_PACK_MODES
+                         + ROUTED_MODES + SHARDED_MODES):
+            pack = self._pack_for_mode()
+            lo, hi = member_domain(pack, reg_name)
+            quant_pack = pack if isinstance(pack, QuantTablePack) else None
+        else:
+            jt = self.table_for(name)
+            lo, hi = jt.boundaries[0], jt.boundaries[jt.n_intervals]
+            quant_pack = None
+        mirror = reg_name in _ODD_HALF_DOMAIN
+
+        def record(oob, total, sat, sat_total):
+            reg = obs.get_registry()
+            reg.counter(f"approx.oob.{reg_name}").add(int(oob))
+            reg.counter(f"approx.lookups.{reg_name}").add(int(total))
+            if int(sat_total):
+                reg.counter(f"approx.quant_sat.{reg_name}").add(int(sat))
+                reg.counter(
+                    f"approx.quant_gathers.{reg_name}").add(int(sat_total))
+
+        def instrumented(x):
+            xf = jnp.asarray(x).astype(jnp.float32)
+            # half-domain odd members evaluate at -|x| (odd_extension): probe
+            # the mirrored input so the effective domain is (lo, -lo)
+            probe = jnp.minimum(xf, -xf) if mirror else xf
+            oob = jnp.sum(((probe < lo) | (probe >= hi)).astype(jnp.int32))
+            if quant_pack is not None:
+                sat, sat_total = quant_saturation_counts(
+                    quant_pack, reg_name, probe)
+            else:
+                sat, sat_total = jnp.zeros((), jnp.int32), 0
+            jax.debug.callback(record, oob, xf.size, sat, sat_total)
+            return f(x)
+
+        return instrumented
 
     def routed_fn(self, fns, *, extrapolate=None) -> Callable:
         """Per-row dynamic dispatch: ``f(x)`` applies ``fns[i]`` to row i of
@@ -369,19 +423,42 @@ class ApproxConfig:
                            extrapolate=extrapolate)
         odd = np.asarray([isinstance(n, str) and n in _ODD_HALF_DOMAIN
                           for n in names])
-        if not odd.any():
+        if odd.any():
+            def routed_odd(x, _f=f):
+                # per-row odd_extension: mirror only the half-domain rows
+                # (same branchless where as the unary path; s is +-1 and
+                # piecewise constant, so tangents flow through f's custom_jvp
+                # untouched)
+                sel = (len(names),) + (1,) * (jnp.asarray(x).ndim - 1)
+                m = jnp.asarray(odd).reshape(sel)
+                s = jnp.where(m & (jnp.asarray(x) >= 0), -1.0, 1.0)
+                return s * _f(s * x)
+
+            f = routed_odd
+        return self._maybe_instrument_routed(f, names, pack)
+
+    def _maybe_instrument_routed(self, f, names, pack):
+        """Routed-dispatch telemetry, decided at closure-build time like
+        :meth:`_maybe_instrument_unary`: each execution adds this routing's
+        static per-member row counts to ``approx.routed.<member>`` — across
+        executions the counters form the fn_id dispatch histogram."""
+        if not obs.device_telemetry_enabled():
             return f
+        counts: Dict[str, int] = {}
+        for n in names:
+            key = n if isinstance(n, str) else pack.names[int(n)]
+            counts[key] = counts.get(key, 0) + 1
 
-        def routed_odd(x):
-            # per-row odd_extension: mirror only the half-domain rows (same
-            # branchless where as the unary path; s is +-1 and piecewise
-            # constant, so tangents flow through f's custom_jvp untouched)
-            sel = (len(names),) + (1,) * (jnp.asarray(x).ndim - 1)
-            m = jnp.asarray(odd).reshape(sel)
-            s = jnp.where(m & (jnp.asarray(x) >= 0), -1.0, 1.0)
-            return s * f(s * x)
+        def record():
+            reg = obs.get_registry()
+            for member, rows in counts.items():
+                reg.counter(f"approx.routed.{member}").add(rows)
 
-        return routed_odd
+        def instrumented(x):
+            jax.debug.callback(record)
+            return f(x)
+
+        return instrumented
 
     def softmax(self, x: jax.Array, axis: int = -1, where=None) -> jax.Array:
         """Numerically-shifted softmax; exponent optionally via the exp_neg table."""

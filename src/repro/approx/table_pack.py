@@ -1351,3 +1351,52 @@ def make_routed_unary_fn(
         return y, slope * dx
 
     return f
+
+
+# --------------------------------------------------------------------------------------
+# Telemetry probes (repro.obs device telemetry; see ApproxConfig._maybe_instrument_unary)
+# --------------------------------------------------------------------------------------
+
+
+def member_domain(pack, fn):
+    """Member ``fn``'s table domain ``[lo, hi)`` as two f32 device scalars.
+
+    Works across pack families: row-padded boundaries (TablePack /
+    ShardedTablePack, ``(F, n_max+1)``) index by ``fid``; flat ragged
+    boundaries (QuantTablePack / PolyTablePack) index via the member's static
+    ``bounds_offset``.  Inputs outside ``[lo, hi)`` hit the hardware clamp (or
+    the linear edge extrapolation for ``_EXTRAPOLATE`` activations) — the
+    out-of-domain event the telemetry layer counts.
+    """
+    fid = _resolve(pack, fn)
+    n = pack.n_intervals[fid]
+    if pack.boundaries.ndim == 2:
+        return pack.boundaries[fid, 0], pack.boundaries[fid, n]
+    bo = pack.bounds_offset(fid)
+    return pack.boundaries[bo], pack.boundaries[bo + n]
+
+
+def quant_saturation_counts(pack: QuantTablePack, fn, x: jax.Array):
+    """(saturated, total) endpoint-code gathers member ``fn`` performs on ``x``.
+
+    A gathered code at the signed extreme of its width (|c| >= 127 for int8,
+    >= 32767 for int16) means the per-sub-interval affine quantizer clipped
+    that entry — rounding error there can exceed the planner's budget, so the
+    saturation RATE (saturated / total) is the quant health signal the
+    telemetry layer reports per function.  Reuses the production selector
+    (``_quant_select``), so the counted addresses are exactly the ones the
+    dequantize-on-read evaluators gather; each lookup touches the two chord
+    endpoints, hence ``total == 2 * x.size``.
+    """
+    fid = _resolve(pack, fn)
+    xf = jnp.asarray(x).astype(jnp.float32)
+    p, invd, base, segs, _, _, _ = _quant_select(pack, fid, xf)
+    i = jnp.clip(jnp.floor((xf - p) * invd), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    codes = pack.codes_for(fid)
+    qmax = 127 if pack.entry_bits[fid] == 8 else 32767
+    c0 = jnp.abs(jnp.take(codes, a, axis=0).astype(jnp.int32))
+    c1 = jnp.abs(jnp.take(codes, a + 1, axis=0).astype(jnp.int32))
+    sat = jnp.sum((c0 >= qmax).astype(jnp.int32)) + \
+        jnp.sum((c1 >= qmax).astype(jnp.int32))
+    return sat, 2 * xf.size

@@ -56,6 +56,8 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .bram import VMEM_BYTES_V5E, VmemCost, vmem_cost_pack
 from .functions import FunctionSpec, get as get_function
 from .quantize import DEFAULT_REFINE_CAP, DEFAULT_RHO, quant_rounding_limit
@@ -503,6 +505,7 @@ def poly_member(
 
 
 @lru_cache(maxsize=256)
+@obs.traced("design.poly_member", "design")
 def _member_cached(name, e_a, lo, hi, degree, bits, algorithm, omega, rho,
                    cap):
     return build_poly_member(name, e_a, lo, hi, degree=degree, bits=bits,
@@ -639,6 +642,7 @@ class PackPlan:
         return "\n".join([head] + rows)
 
 
+@obs.traced("design.plan", "design")
 def plan(
     names: Sequence[str],
     e_a: float,

@@ -16,6 +16,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
+
 from . import bram
 from .functions import FunctionSpec, get as get_function
 from .spacing import SecondDerivMax, reference_spacing
@@ -77,6 +79,7 @@ def run_flow(
 
 
 @lru_cache(maxsize=256)
+@obs.traced("design.splitter", "design")
 def cached_table(
     name: str,
     e_a: float,

@@ -44,6 +44,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
+
 from .functions import FunctionSpec, get as get_function
 from .table import TableSpec
 
@@ -159,6 +161,7 @@ def chord_residual_ranges(spec: TableSpec) -> np.ndarray:
     return out
 
 
+@obs.traced("design.verify_refine", "design")
 def refine_for_quantization(
     spec: TableSpec, limit: float, cap: int = DEFAULT_REFINE_CAP
 ) -> TableSpec:
@@ -376,6 +379,7 @@ def plan_quant_member(
 
 
 @lru_cache(maxsize=256)
+@obs.traced("design.quantize", "design")
 def _plan_cached(name, e_a, lo, hi, algorithm, omega, rho, dtype, cap,
                  degree=1, budget_bytes=None):
     return _plan(name, e_a, lo, hi, algorithm, omega, rho, dtype, cap,

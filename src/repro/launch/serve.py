@@ -6,16 +6,25 @@
 ``--scheduler continuous`` (default) serves through the ContinuousEngine
 (admission queue, per-slot budgets/EOS/RNG, mid-stream slot refill);
 ``--scheduler static`` keeps the fixed-group baseline.
+
+ScopeKit (docs/observability.md): ``--trace PATH`` writes a Perfetto-loadable
+Chrome trace of the run (request lifecycles, refill/decode spans, jit-compile
+events) with the engine's metric summary embedded; ``--obs`` additionally
+enables device-side approximation telemetry and prints the metric summary.
+The launcher always records host-side spans, so throughput is reported both
+wall-clock and steady-state (compile time excluded).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.approx import TABLE_MODES
 from repro.models import build_model, get_config
 from repro.serving.engine import (ContinuousEngine, DecodeEngine, Request,
@@ -59,7 +68,21 @@ def main():
                          "space planner (greedy member downgrade until the "
                          "pack fits; default keeps each function's Pareto-"
                          "cheapest candidate)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the run (open in "
+                         "Perfetto; validate with tools/check_trace.py)")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable device-side approximation telemetry "
+                         "(out-of-domain clamps, quant saturation, routed "
+                         "dispatch) and print the metric summary")
     args = ap.parse_args()
+
+    # host-side spans are always on for the launcher (they never touch the
+    # device computation); device telemetry only with --obs, and only then is
+    # the model built with instrumented activation closures
+    obs.configure(enabled=True, device_telemetry=args.obs,
+                  trace_path=args.trace)
+    obs.reset_tracer()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -105,13 +128,34 @@ def main():
                                cache_len=args.cache_len, engine=engine)
     dt = time.time() - t0
     total_new = sum(r.steps for r in results)  # per-request trimmed counts
+    steady = max(dt - engine.compile_time_s, 1e-9)
     print(f"served {len(results)} requests, {total_new} tokens "
-          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s, {args.scheduler}); "
+          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s wall, "
+          f"{total_new / steady:.1f} tok/s steady after "
+          f"{engine.compile_time_s:.2f}s compile, {args.scheduler}); "
           f"{engine.batch_steps} batch rounds, wasted slot-step fraction "
           f"{engine.wasted_fraction:.2f}")
     for i, r in enumerate(results[:4]):
         print(f"  req{i}: prompt_len={r.prompt_len} steps={r.steps} "
               f"-> {r.tokens[:8].tolist()}...")
+    summary = {"requests": len(results), "tokens": total_new,
+               "wall_s": dt, "compile_time_s": engine.compile_time_s,
+               "tok_s_wall": total_new / dt, "tok_s_steady": total_new / steady,
+               "scheduler": args.scheduler}
+    if args.obs:
+        print(json.dumps({"metrics": obs.get_registry().summary(),
+                          "engine_metrics": engine.metrics.summary()},
+                         indent=1, default=str))
+    if args.trace:
+        obs.get_tracer().save(args.trace, metadata={
+            "summary": summary,
+            "metrics": {
+                # engine-owned latency histograms + the global (device
+                # telemetry) registry merged for the report CLI
+                "histograms": engine.metrics.summary()["histograms"],
+                "counters": obs.get_registry().summary()["counters"],
+            }})
+        print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -12,9 +12,11 @@ real multi-host cluster this same entry point runs per host after
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 
+from repro import obs
 from repro.approx import TABLE_MODES
 from repro.models import ShapeSpec, build_model, get_config
 from repro.optim import adamw
@@ -65,7 +67,19 @@ def main():
                          "space planner (greedy member downgrade until the "
                          "pack fits; default keeps each function's Pareto-"
                          "cheapest candidate)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the run (train.step / "
+                         "train.ckpt / design-phase spans; open in Perfetto, "
+                         "validate with tools/check_trace.py)")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable device-side approximation telemetry and "
+                         "print the metric summary")
     args = ap.parse_args()
+
+    obs.configure(enabled=True, device_telemetry=args.obs,
+                  trace_path=args.trace)
+    obs.reset_tracer()
+    obs.reset_registry()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -113,10 +127,27 @@ def main():
         opt=adamw.AdamWConfig(lr=args.lr, warmup_steps=max(1, args.steps // 20),
                               total_steps=args.steps),
     )
+    t0 = time.perf_counter()
     out = run(model, shape, tc, mesh=mesh)
+    wall = time.perf_counter() - t0
+    steps_done = len(out["losses"])
+    steady = max(wall - out["compile_time_s"], 1e-9)
     print(f"done: step={out['final_step']} "
           f"loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
-          f"stragglers={out['stragglers']} preempted={out['preempted']}")
+          f"stragglers={out['stragglers']} preempted={out['preempted']}; "
+          f"{steps_done / wall:.2f} step/s wall, {steps_done / steady:.2f} "
+          f"step/s steady after {out['compile_time_s']:.2f}s compile")
+    if args.obs:
+        import json
+
+        print(json.dumps(obs.get_registry().summary(), indent=1,
+                         default=str))
+    if args.trace:
+        obs.get_tracer().save(args.trace, metadata={
+            "summary": {"steps": steps_done, "wall_s": wall,
+                        "compile_time_s": out["compile_time_s"]},
+            "metrics": obs.get_registry().summary()})
+        print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,74 @@
+"""repro.obs — ScopeKit: tracing, metrics, and runtime error telemetry.
+
+Three layers, all host-side stdlib/numpy (no jax import — the core design
+layer may use the tracer too):
+
+* :mod:`repro.obs.trace` — a span/event recorder emitting Chrome-trace-event
+  JSON (load the file in Perfetto / ``chrome://tracing``).  The serving
+  engines, the train loop, and the design-time pipeline emit spans through
+  the module-level helpers (``span`` / ``instant`` / ``counter_event``),
+  which are no-ops unless :func:`configure` enabled observability.
+* :mod:`repro.obs.metrics` — counters / gauges / histograms with percentile
+  summaries.  Engines carry their own :class:`Registry`; the global registry
+  (:func:`get_registry`) receives the device-side approximation telemetry
+  (out-of-domain clamp hits, routed fn_id dispatch, quant-code saturation)
+  that ``repro.approx`` records via ``jax.debug.callback`` when
+  ``device_telemetry`` is enabled.
+* :mod:`repro.obs.report` — render a run summary from a trace file and diff
+  two runs (CLI: ``tools/obs_report.py``; validation: ``tools/check_trace.py``).
+
+The overhead contract (docs/observability.md): with :class:`ObsConfig`
+disabled — the default — every hook is a cheap boolean check, no events are
+recorded, no callbacks are staged, and traced jaxprs are bit-identical to a
+build without ScopeKit.
+"""
+
+from .config import (
+    ObsConfig,
+    configure,
+    device_telemetry_enabled,
+    disable,
+    enabled,
+    get_config,
+)
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    get_registry,
+    percentiles,
+    reset_registry,
+)
+from .trace import (
+    Tracer,
+    counter_event,
+    get_tracer,
+    instant,
+    reset_tracer,
+    span,
+    traced,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "ObsConfig",
+    "Registry",
+    "Tracer",
+    "configure",
+    "counter_event",
+    "device_telemetry_enabled",
+    "disable",
+    "enabled",
+    "get_config",
+    "get_registry",
+    "get_tracer",
+    "instant",
+    "percentiles",
+    "reset_registry",
+    "reset_tracer",
+    "span",
+    "traced",
+]

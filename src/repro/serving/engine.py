@@ -27,13 +27,18 @@ the serve benchmark gates on.
 
 from __future__ import annotations
 
+import time
 from collections import deque
+from contextlib import contextmanager, nullcontext
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
+from repro.obs.trace import MAIN_TID, SLOT_TID0
 
 
 @dataclass
@@ -86,6 +91,10 @@ class _EngineBase:
     def reset_counters(self) -> None:
         self.batch_steps = 0  # sampling rounds (prefill rounds + decode steps)
         self.wasted_slot_steps = 0
+        self.compile_time_s = 0.0  # wall time inside compile-flagged spans
+        metrics = getattr(self, "metrics", None)
+        if metrics is not None:
+            metrics.reset()
 
     @property
     def wasted_fraction(self) -> float:
@@ -95,6 +104,36 @@ class _EngineBase:
     def compile_counts(self) -> dict:
         return {name: _jit_cache_size(fn)
                 for name, fn in self._executables.items()}
+
+
+@contextmanager
+def _phase_span(engine, tracer, name: str, cat: str = "serve", fn=None,
+                **args):
+    """B/E span around one engine phase, recorded only when the caller already
+    checked ``obs.enabled()``.  The body may set two keys on the yielded
+    state dict: ``sync`` (a jax value to ``block_until_ready`` before the E
+    event, so durations measure work rather than dispatch) and ``end_args``
+    (extra fields for the E event).  If ``fn``'s jit cache grew during the
+    span, the span is flagged ``compiled=True``, a ``jit.compile`` instant is
+    emitted, and the duration feeds ``engine.compile_time_s`` — the number
+    the CLIs subtract to report steady-state throughput.  After the span,
+    ``st["dur_s"]`` holds the measured duration."""
+    before = _jit_cache_size(fn) if fn is not None else -1
+    tracer.begin(name, cat, **args)
+    t0 = time.perf_counter()
+    st: dict = {}
+    try:
+        yield st
+        if st.get("sync") is not None:
+            jax.block_until_ready(st["sync"])
+    finally:
+        st["dur_s"] = time.perf_counter() - t0
+        end_args = dict(st.get("end_args") or {})
+        if fn is not None and _jit_cache_size(fn) > before:
+            end_args["compiled"] = True
+            engine.compile_time_s += st["dur_s"]
+            tracer.instant("jit.compile", "jit", phase=name)
+        tracer.end(name, cat, **end_args)
 
 
 def _place_engine_packs(model, mesh) -> None:
@@ -129,6 +168,7 @@ class DecodeEngine(_EngineBase):
         self.cache_len = cache_len
         self.temperature = temperature
         self.key = jax.random.key(seed)
+        self.metrics = obs.Registry()  # ttft_s / itl_s histograms
         _place_engine_packs(model, mesh)
         self._prefill = jax.jit(model.prefill)
         self._step = jax.jit(model.decode_step)
@@ -156,6 +196,9 @@ class DecodeEngine(_EngineBase):
         """
         B, S = prompts.shape
         assert B == self.B
+        rec = obs.enabled()
+        tracer = obs.get_tracer() if rec else None
+        t0 = time.perf_counter()
         eos = np.broadcast_to(np.asarray(eos_id, np.int64), (B,))
         budget = np.broadcast_to(np.asarray(max_new, np.int64), (B,))
         horizon = int(budget.max())
@@ -163,29 +206,49 @@ class DecodeEngine(_EngineBase):
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if extra_inputs:
             batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
-        logits, cache = self._prefill(self.params, batch, cache)
+        cm = (_phase_span(self, tracer, "static.prefill", fn=self._prefill,
+                          batch=B, prompt_len=S) if rec else nullcontext({}))
+        with cm as st:
+            logits, cache = self._prefill(self.params, batch, cache)
+            st["sync"] = logits
         out = [self._sample(logits)]
         self.batch_steps += 1
+        if rec:
+            np.asarray(out[0])  # settle the first tokens for an honest TTFT
+            self.metrics.histogram("ttft_s").observe(time.perf_counter() - t0)
         # only force a device->host sync per step when some slot can stop early
         has_eos = bool((eos >= 0).any())
         done = budget <= 1
         if has_eos:
             done = done | ((eos >= 0) & (np.asarray(out[0]) == eos))
         steps = 1  # the prefill logits already yielded one token
-        for i in range(horizon - 1):
-            if done.all():
-                break
-            self.wasted_slot_steps += int(done.sum())
-            tok = out[-1][:, None].astype(jnp.int32)
-            logits, cache = self._step(self.params, tok,
-                                       jnp.asarray(S + i, jnp.int32), cache)
-            nxt = self._sample(logits)
-            out.append(nxt)
-            steps += 1
-            self.batch_steps += 1
-            done = done | (budget <= steps)
-            if has_eos:
-                done = done | ((eos >= 0) & (np.asarray(nxt) == eos))
+        cm = (_phase_span(self, tracer, "static.decode", fn=self._step)
+              if rec else nullcontext({}))
+        with cm as st:
+            for i in range(horizon - 1):
+                if done.all():
+                    break
+                self.wasted_slot_steps += int(done.sum())
+                tok = out[-1][:, None].astype(jnp.int32)
+                logits, cache = self._step(self.params, tok,
+                                           jnp.asarray(S + i, jnp.int32),
+                                           cache)
+                nxt = self._sample(logits)
+                out.append(nxt)
+                steps += 1
+                self.batch_steps += 1
+                done = done | (budget <= steps)
+                if has_eos:
+                    done = done | ((eos >= 0) & (np.asarray(nxt) == eos))
+            st["sync"] = out[-1]
+            st["end_args"] = {"steps": steps - 1}
+        if rec and steps > 1:
+            # decode ticks are uniform in the static loop, so the amortized
+            # per-step interval stands in for each inter-token latency
+            itl = st["dur_s"] / (steps - 1)
+            hist = self.metrics.histogram("itl_s")
+            for _ in range(steps - 1):
+                hist.observe(itl)
         return np.stack([np.asarray(t) for t in out], axis=1), steps
 
 
@@ -309,6 +372,7 @@ class ContinuousEngine(_EngineBase):
         self.key = jax.random.key(seed)
         self.prefill_len = prefill_len
         self.pad_id = pad_id
+        self.metrics = obs.Registry()  # ttft_s / itl_s / queue_wait_s
         _place_engine_packs(model, mesh)
         self._prefill = jax.jit(model.prefill)
 
@@ -366,6 +430,19 @@ class ContinuousEngine(_EngineBase):
         if self._fresh is None:
             self._fresh = self.model.init_cache(B, self.cache_len)
 
+        # Per-request lifecycle spans live on one trace track per slot
+        # (tid = SLOT_TID0 + slot): a slot serves one request at a time, so
+        # every track's B/E events are balanced and non-overlapping.  All
+        # requests enqueue at serve() entry, so queue_wait_s is admission
+        # time minus t0 and ttft_s additionally includes the prefill.
+        rec = obs.enabled()
+        tracer = obs.get_tracer() if rec else None
+        t0 = time.perf_counter()
+        if rec:
+            tracer.set_thread_name(MAIN_TID, "engine")
+            tracer.instant("serve.begin", "serve", requests=len(requests),
+                           batch=B, prefill_len=S0)
+
         results: List[Optional[Result]] = [None] * len(requests)
         pending = deque(enumerate(requests))
         live: List[Optional[_Slot]] = [None] * B
@@ -386,6 +463,9 @@ class ContinuousEngine(_EngineBase):
                 results[s.req_idx] = res
                 if on_result is not None:
                     on_result(s.req_idx, res)
+                if rec:
+                    tracer.end("request", "request", SLOT_TID0 + j,
+                               tokens=len(s.emitted))
                 live[j] = None
 
         while True:
@@ -415,26 +495,52 @@ class ContinuousEngine(_EngineBase):
                     take.append((j, i, r))
                 if not take:
                     break
-                logits, rcache = self._prefill(
-                    self.params, {"tokens": jnp.asarray(rows)}, self._fresh)
+                t_admit = time.perf_counter()
+                cm = (_phase_span(self, tracer, "refill.prefill",
+                                  fn=self._prefill, admitted=len(take))
+                      if rec else nullcontext({}))
+                with cm as st:
+                    logits, rcache = self._prefill(
+                        self.params, {"tokens": jnp.asarray(rows)},
+                        self._fresh)
+                    st["sync"] = logits
                 self.prefills += 1
                 self.batch_steps += 1
                 self.wasted_slot_steps += B - len(take)
                 self.refills += sum(used[j] for j, _, _ in take)
                 for j, _, _ in take:
                     used[j] = True
-                cache = scatter_cache_slots(cache, rcache,
-                                            [j for j, _, _ in take],
-                                            self._axes)
+                cm = (_phase_span(self, tracer, "refill.scatter",
+                                  slots=len(take)) if rec else nullcontext({}))
+                with cm as st:
+                    cache = scatter_cache_slots(cache, rcache,
+                                                [j for j, _, _ in take],
+                                                self._axes)
+                    st["sync"] = cache
                 lg = np.asarray(logits)
                 for j, i, r in take:
                     live[j] = _Slot(req_idx=i, prompt_len=len(r.prompt),
                                     budget=r.max_new_tokens, eos_id=r.eos_id)
                     pos[j] = S0
+                    if rec:
+                        tracer.set_thread_name(SLOT_TID0 + j, f"slot {j}")
+                        tracer.begin("request", "request", SLOT_TID0 + j,
+                                     req_idx=i, prompt_len=len(r.prompt),
+                                     budget=r.max_new_tokens)
+                        self.metrics.histogram("queue_wait_s").observe(
+                            t_admit - t0)
                     tok = self._sample_row(lg[j], i, 0)
                     last[j] = tok
+                    if rec:
+                        tracer.instant("first_token", "request",
+                                       SLOT_TID0 + j, req_idx=i)
+                        self.metrics.histogram("ttft_s").observe(
+                            time.perf_counter() - t0)
                     emit(j, tok)
                 admitted = True
+                if rec:
+                    tracer.counter("slots_occupied",
+                                   sum(s is not None for s in live))
 
             if all(s is None for s in live):
                 break
@@ -456,24 +562,37 @@ class ContinuousEngine(_EngineBase):
             else:
                 k = 1
             n_free = sum(s is None for s in live)
-            pend = []
-            for _ in range(k):
-                tok_dev, logits, pos_dev, cache = self._tick(
-                    self.params, tok_dev, pos_dev, cache)
-                pend.append(tok_dev)
-                self.batch_steps += 1
-                self.wasted_slot_steps += n_free
-            if self.temperature <= 0.0:
-                span = [np.asarray(t)[:, 0] for t in pend]
-            else:  # k == 1: per-slot RNG sampling overrides the argmax token
-                lg = np.asarray(logits)
-                toks = last.copy()
-                for j in range(B):
-                    if live[j] is not None:
-                        toks[j] = self._sample_row(lg[j], live[j].req_idx,
-                                                   len(live[j].emitted))
-                tok_dev = jnp.asarray(toks[:, None], jnp.int32)
-                span = [toks]
+            cm = (_phase_span(self, tracer, "decode.span", fn=self._tick,
+                              k=k, slots=B - n_free)
+                  if rec else nullcontext({}))
+            with cm as st:
+                pend = []
+                for _ in range(k):
+                    tok_dev, logits, pos_dev, cache = self._tick(
+                        self.params, tok_dev, pos_dev, cache)
+                    pend.append(tok_dev)
+                    self.batch_steps += 1
+                    self.wasted_slot_steps += n_free
+                # the settle belongs to the span: span duration then covers
+                # device work, not just dispatch
+                if self.temperature <= 0.0:
+                    span = [np.asarray(t)[:, 0] for t in pend]
+                else:  # k == 1: per-slot RNG sampling overrides argmax token
+                    lg = np.asarray(logits)
+                    toks = last.copy()
+                    for j in range(B):
+                        if live[j] is not None:
+                            toks[j] = self._sample_row(lg[j],
+                                                       live[j].req_idx,
+                                                       len(live[j].emitted))
+                    tok_dev = jnp.asarray(toks[:, None], jnp.int32)
+                    span = [toks]
+            if rec and B > n_free:
+                # every live slot got one token per tick, k ticks per span
+                itl = st["dur_s"] / k
+                hist = self.metrics.histogram("itl_s")
+                for _ in range(k * (B - n_free)):
+                    hist.observe(itl)
             for toks in span:
                 for j in range(B):
                     s = live[j]
@@ -482,6 +601,9 @@ class ContinuousEngine(_EngineBase):
                     last[j] = toks[j]
                     emit(j, int(toks[j]))
             pos += k
+            if rec:
+                tracer.counter("slots_occupied",
+                               sum(s is not None for s in live))
 
         return results
 

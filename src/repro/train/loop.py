@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.data.pipeline import SyntheticLM
 from repro.optim import adamw
 from repro.parallel.params import param_pspecs, shardings_from_specs, zero1_pspecs
@@ -226,18 +227,39 @@ def run(model, shape, cfg: TrainConfig, mesh=None,
             log(f"restored checkpoint at step {step0}")
         jit_step = jax.jit(train_step, donate_argnums=(0,))
 
+    def _cache_size(fn) -> int:
+        try:
+            return fn._cache_size()
+        except Exception:
+            return -1
+
     monitor = StragglerMonitor(cfg.straggler_factor)
     losses = []
     step = int(step0 or 0)
+    compile_time_s = 0.0
+    rec = obs.enabled()
+    tracer = obs.get_tracer() if rec else None
+    step_hist = obs.get_registry().histogram("train.step_s") if rec else None
     try:
         while step < cfg.steps and not stop["flag"]:
             batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+            if rec:
+                tracer.begin("train.step", "train", step=step)
+                jit_before = _cache_size(jit_step)
             t0 = time.perf_counter()
             ctx = use_sharding(mesh) if mesh is not None else _nullcontext()
             with ctx:
                 state, metrics = jit_step(state, batch)
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
+            if rec:
+                end_args = {}
+                if _cache_size(jit_step) > jit_before:
+                    end_args["compiled"] = True
+                    compile_time_s += dt
+                    tracer.instant("jit.compile", "jit", phase="train.step")
+                tracer.end("train.step", "train", **end_args)
+                step_hist.observe(dt)
             warn = monitor.record(dt)
             if warn:
                 log(f"[straggler] {warn}")
@@ -248,7 +270,8 @@ def run(model, shape, cfg: TrainConfig, mesh=None,
                     f"gnorm={float(metrics['grad_norm']):.3f} "
                     f"lr={float(metrics['lr']):.2e} ({dt * 1e3:.0f}ms)")
             if step % cfg.ckpt_every == 0:
-                ckpt.save_async(step, state, extra={"loss": losses[-1]})
+                with obs.span("train.ckpt", "train", step=step):
+                    ckpt.save_async(step, state, extra={"loss": losses[-1]})
     except BaseException:
         log("exception — attempting emergency checkpoint")
         ckpt.wait()
@@ -259,9 +282,11 @@ def run(model, shape, cfg: TrainConfig, mesh=None,
             signal.signal(sig, h)
 
     ckpt.wait()
-    ckpt.save(step, state, extra={"final": True, "reason": stop["reason"]})
+    with obs.span("train.ckpt", "train", step=step, final=True):
+        ckpt.save(step, state, extra={"final": True, "reason": stop["reason"]})
     return {"final_step": step, "losses": losses,
-            "preempted": stop["flag"], "stragglers": monitor.flagged}
+            "preempted": stop["flag"], "stragglers": monitor.flagged,
+            "compile_time_s": compile_time_s}
 
 
 class _nullcontext:

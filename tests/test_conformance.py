@@ -300,3 +300,42 @@ def test_unary_activation_bound(mode):
         scale = max(1.0, float(np.max(np.abs(want))))
         err = float(np.max(np.abs(got - want)))
         assert err <= EA * 1.02 + 1e-5 * scale, (mode, act, err)
+
+
+@pytest.mark.parametrize("mode", ["table_pack", "routed_pack"])
+def test_obs_telemetry_value_parity(mode):
+    """ScopeKit's device telemetry must be a pure observer: the instrumented
+    closure (built with ``device_telemetry`` on) returns bit-identical values
+    to the uninstrumented one under jit, for both the unary and the routed
+    dispatch paths.  Compared jit-to-jit — eager-vs-jit already differs by
+    fp-reassociation noise, which is not what this pins."""
+    from repro import obs
+
+    cfg = ApproxConfig(mode=mode, e_a=EA)
+    x = jnp.asarray(np.linspace(-12.0, 12.0, ROWS * 64,
+                                dtype=np.float32))  # includes out-of-domain
+    try:
+        obs.disable()
+        f_off = jax.jit(cfg.unary("tanh"))
+        y_off = np.asarray(f_off(x))
+        obs.configure(enabled=True, device_telemetry=True)
+        f_on = jax.jit(cfg.unary("tanh"))
+        y_on = np.asarray(f_on(x))
+        np.testing.assert_array_equal(y_on, y_off, err_msg=f"{mode} unary")
+        if mode.startswith("routed"):
+            xr = x.reshape(ROWS, -1)
+            slots = tuple(("gelu", "tanh", "silu")[i % 3] for i in range(ROWS))
+            obs.disable()
+            g_off = jax.jit(cfg.routed_fn(slots))
+            z_off = np.asarray(g_off(xr))
+            obs.configure(enabled=True, device_telemetry=True)
+            g_on = jax.jit(cfg.routed_fn(slots))
+            z_on = np.asarray(g_on(xr))
+            np.testing.assert_array_equal(z_on, z_off,
+                                          err_msg=f"{mode} routed")
+        jax.effects_barrier()
+        counters = obs.get_registry().summary()["counters"]
+        assert counters.get("approx.oob.tanh", 0) > 0  # probe left the domain
+    finally:
+        obs.disable()
+        obs.reset_registry()

@@ -304,3 +304,37 @@ class TestContinuousAcrossFamilies:
                                      engine=oracle)
             np.testing.assert_array_equal(out[i].tokens, want,
                                           err_msg=f"{arch}/{mode} req {i}")
+
+
+class TestCounterLifecycle:
+    """The batch/wasted-step counters and the engine metric registry across
+    resets — the denominators the serve bench and ScopeKit report from."""
+
+    def test_wasted_fraction_defined_at_zero_rounds(self, tiny_model):
+        """A fresh engine (batch_steps == 0) reports wasted_fraction 0.0
+        instead of dividing by zero, and serving an empty queue keeps it so."""
+        model, params = tiny_model
+        eng = ContinuousEngine(model, params, batch_size=2, cache_len=32)
+        assert eng.batch_steps == 0
+        assert eng.wasted_fraction == 0.0
+        assert eng.serve([]) == []
+        assert eng.batch_steps == 0 and eng.wasted_fraction == 0.0
+
+    def test_reset_counters_clears_metrics_registry(self, tiny_model):
+        """reset_counters() resets the engine's ScopeKit registry along with
+        the integers, so warmup latencies never leak into a timed window."""
+        from repro import obs
+
+        model, params = tiny_model
+        eng = ContinuousEngine(model, params, batch_size=2, cache_len=32)
+        try:
+            obs.configure(enabled=True)
+            eng.serve(mixed_requests(np.random.default_rng(3), 3))
+        finally:
+            obs.disable()
+        assert eng.metrics.summary()["histograms"]  # warmup recorded latencies
+        assert eng.batch_steps > 0
+        eng.reset_counters()
+        assert eng.metrics.summary()["histograms"] == {}
+        assert eng.batch_steps == 0 and eng.wasted_slot_steps == 0
+        assert eng.compile_time_s == 0.0 and eng.wasted_fraction == 0.0

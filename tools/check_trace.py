@@ -1,0 +1,125 @@
+"""Trace-file gate: validate a ScopeKit Chrome-trace JSON artifact.
+
+CI's fast tier produces ``TRACE_serve.json`` from a reduced continuous-serve
+run and pipes it through this script before uploading it; the trace-schema
+test reuses :func:`validate_trace` directly.  Checks, per the Trace Event
+Format plus ScopeKit's own invariants:
+
+* top level is ``{"traceEvents": [...]}`` (or the bare-array form);
+* every event has ``name`` / ``ph`` / ``pid`` / ``tid``, a numeric ``ts``
+  (metadata ``M`` events are exempt from ``ts``), and a known phase;
+* per ``(pid, tid)`` track: ``B``/``E`` balanced and properly nested, and
+  timestamps non-decreasing;
+* ``X`` events carry a non-negative ``dur``; ``C`` events carry a dict of
+  numeric series.
+
+Run:  python tools/check_trace.py TRACE_serve.json
+"""
+
+from __future__ import annotations
+
+import json
+import numbers
+import sys
+
+KNOWN_PHASES = frozenset("BEXiICMbne")
+
+
+def validate_trace(doc) -> list[str]:
+    """Return a list of human-readable schema violations (empty == clean)."""
+    errors: list[str] = []
+    if isinstance(doc, list):
+        events = doc
+    elif isinstance(doc, dict):
+        events = doc.get("traceEvents")
+        if not isinstance(events, list):
+            return ["top level has no traceEvents array"]
+    else:
+        return ["top level is neither an object nor an array"]
+    if not events:
+        errors.append("traceEvents is empty")
+
+    stacks: dict[tuple, list] = {}
+    last_ts: dict[tuple, float] = {}
+    for i, ev in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: missing name")
+            name = "?"
+        where = f"event[{i}] {ph}:{name}"
+        if ph not in KNOWN_PHASES:
+            errors.append(f"{where}: unknown phase {ph!r}")
+            continue
+        for field in ("pid", "tid"):
+            if not isinstance(ev.get(field), numbers.Number):
+                errors.append(f"{where}: missing numeric {field}")
+        track = (ev.get("pid"), ev.get("tid"))
+        if ph == "M":
+            continue  # metadata events carry no timestamp
+        ts = ev.get("ts")
+        if not isinstance(ts, numbers.Number):
+            errors.append(f"{where}: missing numeric ts")
+            continue
+        if ts < last_ts.get(track, float("-inf")):
+            errors.append(f"{where}: ts went backwards on track {track} "
+                          f"({ts} < {last_ts[track]})")
+        last_ts[track] = ts
+        if ph == "B":
+            stacks.setdefault(track, []).append((name, ts))
+        elif ph == "E":
+            stack = stacks.get(track)
+            if not stack:
+                errors.append(f"{where}: E without matching B on track "
+                              f"{track}")
+            else:
+                open_name, open_ts = stack.pop()
+                if open_name != name:
+                    errors.append(
+                        f"{where}: E closes {name!r} but innermost open span "
+                        f"on track {track} is {open_name!r} (not nested)")
+                if ts < open_ts:
+                    errors.append(f"{where}: span ends before it begins")
+        elif ph == "X":
+            dur = ev.get("dur", 0)
+            if not isinstance(dur, numbers.Number) or dur < 0:
+                errors.append(f"{where}: X needs a non-negative dur")
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                    isinstance(v, numbers.Number) for v in args.values()):
+                errors.append(f"{where}: C needs a dict of numeric series")
+    for track, stack in stacks.items():
+        for open_name, _ in stack:
+            errors.append(f"track {track}: span {open_name!r} never ended "
+                          f"(unbalanced B/E)")
+    return errors
+
+
+def main(argv: list[str]) -> None:
+    if len(argv) != 1:
+        print("usage: python tools/check_trace.py TRACE.json")
+        raise SystemExit(2)
+    path = argv[0]
+    with open(path) as f:
+        doc = json.load(f)
+    errors = validate_trace(doc)
+    if errors:
+        print(f"trace check FAILED: {path}")
+        for e in errors[:50]:
+            print(f"  - {e}")
+        if len(errors) > 50:
+            print(f"  ... and {len(errors) - 50} more")
+        raise SystemExit(1)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    tracks = {(e.get("pid"), e.get("tid")) for e in events}
+    print(f"trace check OK: {path} — {len(events)} events on "
+          f"{len(tracks)} tracks")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

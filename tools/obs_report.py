@@ -1,0 +1,36 @@
+"""Render a ScopeKit run summary — or diff two runs — from trace files.
+
+Run:  PYTHONPATH=src python tools/obs_report.py TRACE_serve.json
+      PYTHONPATH=src python tools/obs_report.py TRACE_new.json --baseline TRACE_old.json
+
+The heavy lifting lives in ``repro.obs.report`` (span aggregation from
+matched B/E pairs, metric-percentile tables, relative deltas); this is the
+thin CLI over it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs.report import summarize_file  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="ScopeKit Chrome-trace JSON file")
+    ap.add_argument("--baseline", default=None,
+                    help="second trace to diff against (prints deltas)")
+    args = ap.parse_args()
+    try:
+        print(summarize_file(args.trace, baseline=args.baseline))
+    except BrokenPipeError:  # e.g. piped into head; not an error
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+
+
+if __name__ == "__main__":
+    main()
