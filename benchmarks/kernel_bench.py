@@ -36,6 +36,9 @@ BENCH_SHARDEDPACK_JSON = os.path.join(
 BENCH_POLYPACK_JSON = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_polypack.json")
+BENCH_RANGEFOLD_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_rangefold.json")
 
 
 def _time(f, *args, reps=20) -> float:
@@ -422,6 +425,67 @@ def routed_dispatch_bench(size: int = 1 << 20, e_a: float = 1e-4,
     return rows
 
 
+def rangefold_bench(size: int = 1 << 18, e_a: float = 1e-4,
+                    out_path: str = BENCH_RANGEFOLD_JSON) -> List[tuple]:
+    """RangeFold fold-overhead report -> BENCH_rangefold.json.
+
+    The folded kernels buy unbounded domains (full-range sin/cos/exp/log,
+    table-served RoPE) for the price of a reduction prologue + reconstruction
+    epilogue fused around 1-2 core lookups.  This bench prices that fold:
+    the same wide-range tensor through (a) the exact jnp transcendental,
+    (b) the folded jnp oracle, (c) the fused folded Pallas kernel, plus the
+    plain bounded-member pack lookup as the no-fold kernel baseline.  All
+    wall-times are host-CPU interpret mode — relative behaviour only (the
+    trig fold is ~30 elementwise ops + 2 lookups vs the plain path's 1)."""
+    from repro.approx import build_pack
+    from repro.approx.range_fold import FOLDED_CORE_MEMBERS, eval_folded_ref
+    from repro.kernels.table_pack_lookup import (
+        folded_pack_lookup_pallas, table_pack_lookup_pallas)
+
+    names = ("gelu", "silu", "tanh") + FOLDED_CORE_MEMBERS
+    pack = build_pack(names, e_a)
+    feat = max(256, (size // 8 // 256) * 256)
+    # wide range: uniform exponents so Cody-Waite AND Payne-Hanek lanes run
+    rng = np.random.default_rng(6)
+    x = jnp.asarray((rng.uniform(-1, 1, (8, feat)) *
+                     10.0 ** rng.uniform(-2, 6, (8, feat)))
+                    .astype(np.float32))
+    rows, report_fns = [], {}
+    for name in ("sin", "cos", "exp", "log"):
+        xs = jnp.abs(x) if name == "log" else x
+        t_exact = _time_min(jax.jit(getattr(jnp, name)), xs)
+        t_ref = _time_min(
+            jax.jit(lambda v, _n=name: eval_folded_ref(pack, _n, v)), xs)
+        t_kern = _time_min(
+            lambda v, _n=name: folded_pack_lookup_pallas(pack, _n, v), xs)
+        report_fns[name] = {
+            "exact_us": round(t_exact, 1), "folded_ref_us": round(t_ref, 1),
+            "folded_kernel_us": round(t_kern, 1),
+            "ratio_folded_vs_exact": round(t_ref / t_exact, 3)}
+        rows.append((f"kernel.rangefold.{name}.folded_ref_us", round(t_ref, 1),
+                     f"exact={t_exact:.1f}us kernel={t_kern:.1f}us"))
+        print(f"[rangefold] {name:4s} exact={t_exact:8.1f}us "
+              f"ref={t_ref:8.1f}us kernel={t_kern:8.1f}us "
+              f"({t_ref / t_exact:.2f}x vs exact)")
+    t_plain = _time_min(lambda v: table_pack_lookup_pallas(pack, "gelu", v), x)
+    t_fold = report_fns["exp"]["folded_kernel_us"]
+    report = {
+        "e_a": e_a, "shape": list(x.shape), "functions": report_fns,
+        "plain_member_kernel_us": round(t_plain, 1),
+        "fold_overhead_vs_plain_kernel": round(t_fold / t_plain, 3),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    rows.append(("kernel.rangefold.fold_overhead", round(t_fold / t_plain, 2),
+                 f"folded exp kernel vs plain gelu kernel {t_plain:.1f}us"))
+    print(f"[rangefold] fold overhead: folded exp kernel {t_fold:.1f}us vs "
+          f"plain member kernel {t_plain:.1f}us "
+          f"({t_fold / t_plain:.2f}x)")
+    print(f"[rangefold] report -> {out_path}")
+    return rows
+
+
 def shardedpack_bench(size: int = 1 << 18, e_a: float = 1e-4,
                       shard_counts=(2, 4),
                       out_path: str = BENCH_SHARDEDPACK_JSON) -> List[tuple]:
@@ -671,6 +735,10 @@ def main() -> None:
     ap.add_argument("--polypack", action="store_true",
                     help="emit BENCH_polypack.json (planner auto pick vs "
                          "linear-f32 entries and quant-auto VMEM)")
+    ap.add_argument("--rangefold", action="store_true",
+                    help="emit BENCH_rangefold.json (folded full-range "
+                         "sin/cos/exp/log vs exact and vs the plain pack "
+                         "kernel)")
     ap.add_argument("--size", type=int, default=None,
                     help="probe tensor size (default 2^18; 2^20 for "
                          "--routedpack so static and routed tile to the same "
@@ -706,6 +774,9 @@ def main() -> None:
         polypack_bench(args.size or (1 << 18), args.ea,
                        args.out or BENCH_POLYPACK_JSON)
         polypack_bench_gate(args.out or BENCH_POLYPACK_JSON)
+    elif args.rangefold:
+        rangefold_bench(args.size or (1 << 18), args.ea,
+                        args.out or BENCH_RANGEFOLD_JSON)
     else:
         activation_bench(args.size or (1 << 18))
         interval_count_flatness()
@@ -713,6 +784,7 @@ def main() -> None:
         routed_dispatch_bench(args.size or (1 << 20))
         shardedpack_bench(args.size or (1 << 18))
         polypack_bench(args.size or (1 << 18))
+        rangefold_bench(args.size or (1 << 18))
 
 
 if __name__ == "__main__":

@@ -16,8 +16,14 @@ activations; see :meth:`ApproxConfig.routed_fn`) and every member's unary
 share one compiled executable — or the ``sharded_pack`` / ``sharded_pack_ref``
 variants, which partition the pack's values vector ``pack_shards`` ways over
 the mesh 'model' axis (per-shard base rebasing, shard-local masked lookup,
-psum combine) for packs that outgrow one core's VMEM.  Configured per-model
-via :class:`ApproxConfig`.
+psum combine) for packs that outgrow one core's VMEM, or the ``folded_*``
+variants (``folded_pack`` / ``folded_pack_ref`` / ``folded_routed_pack`` /
+``folded_routed_pack_ref``), which put a RANGE-REDUCTION stage
+(:mod:`repro.core.range_reduce`) in front of the pack so ``sin`` / ``cos`` /
+``exp`` / ``log`` are served over the ENTIRE finite f32 domain from small
+canonical-interval core members — fused fold+lookup kernel in the static
+shape, jnp fold around the routed kernel in the routed shape.  Configured
+per-model via :class:`ApproxConfig`.
 """
 
 from __future__ import annotations
@@ -35,6 +41,8 @@ from repro.core.flow import cached_table
 from repro.core.functions import get as get_function
 
 from .jax_table import JaxTable, from_spec, make_table_fn
+from .range_fold import (FOLDABLE, FOLDED_CORE_MEMBERS, FOLDED_MODES,
+                         make_folded_fn, make_folded_routed_unary_fn)
 from .table_pack import (PolyTablePack, QuantTablePack, ShardedTablePack,
                          TablePack, build_pack, build_poly_pack,
                          build_quant_pack, build_sharded_pack, make_pack_fn,
@@ -48,7 +56,9 @@ Mode = str  # "exact" | "table_ref" | "table_pallas" | "table_pack" |
 #             "poly_pack" | "poly_pack_ref" |
 #             "routed_pack" | "routed_pack_ref" | "routed_quant_pack" |
 #             "routed_quant_pack_ref" | "routed_poly_pack" |
-#             "routed_poly_pack_ref" | "sharded_pack" | "sharded_pack_ref"
+#             "routed_poly_pack_ref" | "sharded_pack" | "sharded_pack_ref" |
+#             "folded_pack" | "folded_pack_ref" | "folded_routed_pack" |
+#             "folded_routed_pack_ref"
 
 ROUTED_MODES = ("routed_pack", "routed_pack_ref", "routed_quant_pack",
                 "routed_quant_pack_ref", "routed_poly_pack",
@@ -58,7 +68,8 @@ PACK_MODES = ("table_pack", "table_pack_ref")
 QUANT_PACK_MODES = ("quant_pack", "quant_pack_ref")
 POLY_PACK_MODES = ("poly_pack", "poly_pack_ref")
 TABLE_MODES = (("table_ref", "table_pallas") + PACK_MODES + QUANT_PACK_MODES
-               + POLY_PACK_MODES + ROUTED_MODES + SHARDED_MODES)
+               + POLY_PACK_MODES + ROUTED_MODES + SHARDED_MODES
+               + FOLDED_MODES)
 # modes whose pack artifact is the quantized one (vs the f32 pack)
 _QUANT_BACKED = QUANT_PACK_MODES + ("routed_quant_pack", "routed_quant_pack_ref")
 # modes whose pack artifact is the Pareto-planned polynomial one
@@ -66,7 +77,7 @@ _POLY_BACKED = POLY_PACK_MODES + ("routed_poly_pack", "routed_poly_pack_ref")
 # modes whose runtime is the Pallas kernels (vs a jnp oracle)
 _PALLAS_BACKED = ("table_pallas", "table_pack", "quant_pack", "poly_pack",
                   "routed_pack", "routed_quant_pack", "routed_poly_pack",
-                  "sharded_pack")
+                  "sharded_pack", "folded_pack", "folded_routed_pack")
 
 
 def odd_extension(fn):
@@ -111,6 +122,9 @@ _PACK_CACHE: Dict[tuple, TablePack] = {}
 _QUANT_PACK_CACHE: Dict[tuple, QuantTablePack] = {}
 _POLY_PACK_CACHE: Dict[tuple, PolyTablePack] = {}
 _SHARDED_PACK_CACHE: Dict[tuple, ShardedTablePack] = {}
+# one (sin, cos) closure pair per distinct rope_table configuration — every
+# layer's rotary shares the same compiled folded-trig executables
+_ROPE_SIN_COS_CACHE: Dict[tuple, Callable] = {}
 
 _EXACT: Dict[str, Callable] = {
     "gelu": lambda x: jax.nn.gelu(x, approximate=False),
@@ -122,6 +136,9 @@ _EXACT: Dict[str, Callable] = {
     "softplus": jax.nn.softplus,
     "exp": jnp.exp,
     "exp_neg": jnp.exp,
+    "sin": jnp.sin,
+    "cos": jnp.cos,
+    "log": jnp.log,
     "erf": jax.scipy.special.erf,
     "relu": jax.nn.relu,  # piecewise-linear already; never table'd
     "identity": lambda x: x,
@@ -195,6 +212,10 @@ class ApproxConfig:
     # when a use_sharding mesh binds a 'model' axis of this width, otherwise
     # as a stacked-shard-axis sum on one device — bit-identical either way.
     pack_shards: int = 2
+    # serve RoPE's per-position sin/cos rotations from the folded table path
+    # (any table mode; the f32 pack gains the trig core members).  Off keeps
+    # exact jnp trig in the rotary embedding.
+    rope_table: bool = False
 
     def table_for(self, name: str) -> JaxTable:
         reg_name = _TABLE_NAME.get(name, name)
@@ -205,8 +226,14 @@ class ApproxConfig:
         return from_spec(spec)
 
     def pack(self) -> TablePack:
-        """The ONE multi-function pack this config's activations share."""
+        """The ONE multi-function pack this config's activations share.
+
+        Folded modes (and ``rope_table``) extend ``pack_functions`` with the
+        canonical-interval core members the range reductions look up
+        (:data:`repro.approx.range_fold.FOLDED_CORE_MEMBERS`)."""
         names = tuple(self.pack_functions)
+        if self.mode in FOLDED_MODES or self.rope_table:
+            names += tuple(c for c in FOLDED_CORE_MEMBERS if c not in names)
         overrides = tuple(sorted(
             (k, v) for k, v in self.interval_overrides.items() if k in names))
         key = (names, self.e_a, self.algorithm, self.omega, overrides)
@@ -297,18 +324,31 @@ class ApproxConfig:
         if self.mode not in TABLE_MODES:
             raise ValueError(f"unknown approx mode {self.mode!r}")
         reg_name = _TABLE_NAME.get(name, name)
+        if self.mode in FOLDED_MODES and name in FOLDABLE:
+            # foldable names keep their full-range identity: "exp" stays exp
+            # (the 2^k split covers all of f32; no exp_neg clamp-remap needed)
+            reg_name = name
         exact_d1 = None
         if self.exact_grad:
             fn = get_function(reg_name)
             exact_d1 = partial(fn.d1f, xp=jnp)
         if self.mode in (PACK_MODES + QUANT_PACK_MODES + POLY_PACK_MODES
-                         + ROUTED_MODES + SHARDED_MODES):
+                         + ROUTED_MODES + SHARDED_MODES + FOLDED_MODES):
             pack = self._pack_for_mode()
-            if reg_name not in pack.names:
+            foldable = self.mode in FOLDED_MODES and reg_name in FOLDABLE
+            if reg_name not in pack.names and not foldable:
+                # foldable members need only their CORE members in the pack
+                # (pack() appends them); everything else must be a member
                 raise KeyError(
                     f"{reg_name!r} is not in pack_functions={pack.names}; add it "
                     f"to ApproxConfig.pack_functions to serve it from the pack")
-            if self.mode in ROUTED_MODES:
+            if self.mode in FOLDED_MODES:
+                # range-reduced full-f32-domain serving for sin/cos/exp/log;
+                # non-foldable members fall through to the plain pack paths
+                # inside make_folded_* (folded modes superset table/routed)
+                make = make_folded_routed_unary_fn \
+                    if self.mode.startswith("folded_routed") else make_folded_fn
+            elif self.mode in ROUTED_MODES:
                 # dynamic dispatch with uniform fn_ids: the member identity is
                 # a runtime operand, so every unary shares ONE executable
                 make = make_routed_unary_fn
@@ -356,8 +396,14 @@ class ApproxConfig:
         """
         if not obs.device_telemetry_enabled():
             return f
-        if self.mode in (PACK_MODES + QUANT_PACK_MODES + POLY_PACK_MODES
-                         + ROUTED_MODES + SHARDED_MODES):
+        if self.mode in FOLDED_MODES and reg_name in FOLDABLE:
+            # folded members serve the entire finite f32 domain: the fold maps
+            # every input into the core member's interval, so there is no
+            # out-of-domain clamp to count
+            lo, hi = -jnp.inf, jnp.inf
+            quant_pack = None
+        elif self.mode in (PACK_MODES + QUANT_PACK_MODES + POLY_PACK_MODES
+                           + ROUTED_MODES + SHARDED_MODES + FOLDED_MODES):
             pack = self._pack_for_mode()
             lo, hi = member_domain(pack, reg_name)
             quant_pack = pack if isinstance(pack, QuantTablePack) else None
@@ -461,17 +507,45 @@ class ApproxConfig:
         return instrumented
 
     def softmax(self, x: jax.Array, axis: int = -1, where=None) -> jax.Array:
-        """Numerically-shifted softmax; exponent optionally via the exp_neg table."""
+        """Numerically-shifted softmax; exponent optionally via the exp table."""
         if not self.softmax_table or self.mode == "exact":
             return jax.nn.softmax(x, axis=axis, where=where)
         exp_fn = self.unary("exp")
         m = jnp.max(x, axis=axis, keepdims=True, where=where, initial=-1e30)
         z = x - jax.lax.stop_gradient(m)
-        # table domain is [-16, 0]; clamp matches the hardware address saturation
-        e = exp_fn(jnp.maximum(z, -16.0))
+        if self.mode in FOLDED_MODES:
+            # folded exp serves the whole f32 domain — no address clamp needed
+            e = exp_fn(z)
+        else:
+            # exp_neg table domain is [-16, 0]; clamp matches the hardware
+            # address saturation
+            e = exp_fn(jnp.maximum(z, -16.0))
         if where is not None:
             e = jnp.where(where, e, 0.0)
         return e / jnp.sum(e, axis=axis, keepdims=True)
+
+    def rope_sin_cos(self) -> Optional[Callable]:
+        """Table-served rotary trig: ``None`` (exact jnp sin/cos) unless
+        ``rope_table`` is on in a table mode, else ``f(ang) -> (sin, cos)``
+        through the folded trig members — full position range via Cody-Waite /
+        Payne-Hanek reduction, served from the SAME f32 pack artifact as the
+        activations (pack() appends the trig cores whenever rope_table is on).
+        ``models/common.apply_rope`` threads this as its ``sin_cos`` hook."""
+        if not self.rope_table or self.mode == "exact":
+            return None
+        if self.mode not in TABLE_MODES:
+            raise ValueError(f"unknown approx mode {self.mode!r}")
+        names = tuple(self.pack_functions)
+        overrides = tuple(sorted(self.interval_overrides.items()))
+        key = (self.mode, self.e_a, self.algorithm, self.omega, names,
+               overrides)
+        if key not in _ROPE_SIN_COS_CACHE:
+            pack = self.pack()  # the f32 pack, with trig cores appended
+            use_pallas = self.mode in _PALLAS_BACKED
+            sin_fn = make_folded_fn(pack, "sin", use_pallas=use_pallas)
+            cos_fn = make_folded_fn(pack, "cos", use_pallas=use_pallas)
+            _ROPE_SIN_COS_CACHE[key] = lambda ang: (sin_fn(ang), cos_fn(ang))
+        return _ROPE_SIN_COS_CACHE[key]
 
 
 EXACT = ApproxConfig(mode="exact")

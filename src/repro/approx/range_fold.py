@@ -1,0 +1,284 @@
+"""RangeFold: serve unbounded-domain transcendentals from the bounded pack.
+
+The fold math lives in :mod:`repro.core.range_reduce`; this module is the approx
+layer around it — the oracles, custom_jvp wrappers, and dispatch plumbing that
+turn a reduction + a canonical-interval pack member into a full-f32-range
+``sin`` / ``cos`` / ``exp`` / ``log``:
+
+    sin(x) = +-{sin_core, cos_core}(r),     x = k*(pi/2) + r   (octant select)
+    exp(x) = 2^k * exp_core(r),             r in [-ln2/2, ln2/2]
+    log(x) = e*ln2 + log_core(m),           x = m * 2^e, m in [sqrt2/2, sqrt2)
+
+Two serving shapes, mirroring the pack modes:
+
+* **static** (``folded_pack`` / ``folded_pack_ref``): the fold runs INSIDE the
+  fused Pallas kernel (prologue) together with one or two static-fn_id core
+  lookups and the reconstruction epilogue
+  (:func:`repro.kernels.table_pack_lookup.folded_pack_lookup_pallas`); the jnp
+  oracle (:func:`eval_folded_ref`) applies the identical op sequence, so the
+  kernel/oracle pair is bit-identical like every other mode pair.
+* **routed** (``folded_routed_pack`` / ``folded_routed_pack_ref``): the fold and
+  reconstruction run as jnp prologue/epilogue around the existing scalar-prefetch
+  ROUTED kernel, which performs the core lookups with runtime fn_ids — bit
+  parity reduces to the routed dispatch contract.  Only static (Python-string)
+  function names fold; a traced fn_id cannot pick a fold at trace time.
+
+Non-foldable members fall through to the plain pack paths unchanged, so the
+``folded_*`` modes are a superset of ``table_pack`` / ``routed_pack``.
+
+Error contracts (verified full-range by ``tests/harness/fullrange.py``): folded
+sin/cos/log keep the pack's ABSOLUTE Ea bound over the whole finite f32 range;
+folded exp is RELATIVE — ``|err| <= Ea * max(1, |exp(x)|)`` — because the
+``2^k`` reconstruction scales the core table's absolute error.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.range_reduce import (exp_edges, exp_fold, exp_reconstruct,
+                                     log_edges, log_fold, log_reconstruct,
+                                     trig_edges, trig_fold, trig_reconstruct,
+                                     trig_slope_reconstruct)
+
+from .table_pack import (eval_pack_ref, eval_pack_slope, eval_routed_ref,
+                         make_pack_fn, make_routed_unary_fn)
+
+FOLDED_MODES = ("folded_pack", "folded_pack_ref",
+                "folded_routed_pack", "folded_routed_pack_ref")
+
+# The canonical-interval members the folds look up; ApproxConfig.pack() appends
+# them to pack_functions whenever a folded mode (or rope_table) needs them.
+FOLDED_CORE_MEMBERS = ("sin_core", "cos_core", "exp_core", "log_core")
+
+# foldable member -> core members its reconstruction reads
+FOLDABLE = {
+    "sin": ("sin_core", "cos_core"),
+    "cos": ("sin_core", "cos_core"),
+    "exp": ("exp_core",),
+    "log": ("log_core",),
+}
+
+
+def _check_cores(pack, name: str) -> None:
+    missing = [c for c in FOLDABLE[name] if c not in pack.names]
+    if missing:
+        raise KeyError(
+            f"folded {name!r} needs core members {missing} in the pack; "
+            f"pack has {pack.names} (ApproxConfig.pack() appends the cores "
+            f"automatically in folded modes)")
+
+
+def _log_slope_mask(xf):
+    """1.0 on positive NORMAL finite lanes, else 0.0 — decided BITWISE.
+
+    XLA's f32 DAZ flush is not applied consistently across a fused
+    computation (``x > 0`` can see the subnormal while ``m / x`` sees zero,
+    yielding ``inf`` through a supposedly-masked lane), so the slope mask
+    must not depend on arithmetic comparisons of a possibly-subnormal x.
+    Subnormal lanes get slope 0 like the other non-finite/edge lanes."""
+    bits = jax.lax.bitcast_convert_type(xf, jnp.uint32)
+    field = (bits >> 23) & jnp.uint32(0xFF)
+    pos_normal = ((bits >> 31) == 0) & (field >= 1) & (field <= 254)
+    return pos_normal.astype(jnp.float32)
+
+
+def _log_slope_safe_x(xf):
+    """xf with non-(positive-normal) lanes replaced by 1.0, so the masked
+    ``m / x`` never divides by a DAZ-flushed zero (0 * inf = NaN otherwise)."""
+    mask = _log_slope_mask(xf)
+    return xf * mask + (1.0 - mask)
+
+
+# --------------------------------------------------------------------------------------
+# jnp oracles (the *_ref runtimes; also the custom_jvp slope rules)
+# --------------------------------------------------------------------------------------
+
+
+def eval_folded_ref(pack, name: str, x, *, extrapolate: bool = False):
+    """Fold + core lookup + reconstruct, all in jnp — the ``folded_pack_ref``
+    runtime and the bit-parity oracle of the fused folded kernel.  Non-foldable
+    members fall through to :func:`eval_pack_ref`."""
+    if name not in FOLDABLE:
+        return eval_pack_ref(pack, name, x, extrapolate=extrapolate)
+    _check_cores(pack, name)
+    xf = jnp.asarray(x).astype(jnp.float32)
+    if name in ("sin", "cos"):
+        r, q, sflip = trig_fold(xf)
+        ys = eval_pack_ref(pack, "sin_core", r)
+        yc = eval_pack_ref(pack, "cos_core", r)
+        return trig_edges(xf, trig_reconstruct(name, ys, yc, q, sflip))
+    if name == "exp":
+        r, k = exp_fold(xf)
+        return exp_edges(xf, exp_reconstruct(eval_pack_ref(pack, "exp_core", r), k))
+    m, e = log_fold(xf)
+    return log_edges(xf, log_reconstruct(eval_pack_ref(pack, "log_core", m), e))
+
+
+def eval_folded_slope(pack, name: str, x, *, extrapolate: bool = False):
+    """d/dx of the folded surrogate via chain rule over the CORE table slopes.
+
+    The folds are piecewise-affine in x with unit inner derivative (trig, exp:
+    ``dr/dx = 1`` inside each quadrant/octave) or the exact scale factor (log:
+    ``dm/dx = m/x``), so the surrogate's derivative is the core chord slope
+    transported through the reconstruction.  Non-finite / out-of-support lanes
+    return 0 to keep optimizer math finite."""
+    if name not in FOLDABLE:
+        return eval_pack_slope(pack, name, x, extrapolate=extrapolate)
+    _check_cores(pack, name)
+    xf = jnp.asarray(x).astype(jnp.float32)
+    if name in ("sin", "cos"):
+        r, q, sflip = trig_fold(xf)
+        ds = eval_pack_slope(pack, "sin_core", r)
+        dc = eval_pack_slope(pack, "cos_core", r)
+        sl = trig_slope_reconstruct(name, ds, dc, q, sflip)
+        return jnp.where(jnp.isfinite(xf), sl, 0.0)
+    if name == "exp":
+        r, k = exp_fold(xf)
+        sl = exp_reconstruct(eval_pack_slope(pack, "exp_core", r), k)
+        # the 2^k rescale overflows exactly where exp(x) itself does; zero
+        # those lanes too so optimizer math stays finite
+        return jnp.where(jnp.isfinite(xf) & jnp.isfinite(sl), sl, 0.0)
+    m, e = log_fold(xf)
+    return _log_slope_mask(xf) * eval_pack_slope(pack, "log_core", m) \
+        * (m / _log_slope_safe_x(xf))
+
+
+# --------------------------------------------------------------------------------------
+# static dispatch (fused fold-in-kernel) and the differentiable wrapper
+# --------------------------------------------------------------------------------------
+
+
+def folded_lookup(pack, name: str, x, *, extrapolate: bool = False):
+    """Kernel-side ``folded_pack`` evaluation: the fused fold+lookup kernel for
+    foldable members, the plain pack kernel otherwise."""
+    from repro.kernels.table_pack_lookup import (folded_pack_lookup_pallas,
+                                                 table_pack_lookup_pallas)
+
+    if name in FOLDABLE:
+        _check_cores(pack, name)
+        return folded_pack_lookup_pallas(pack, name, x)
+    return table_pack_lookup_pallas(pack, name, x, extrapolate=extrapolate)
+
+
+def make_folded_fn(pack, name: str, *, use_pallas: bool = True, exact_d1=None,
+                   extrapolate: bool = False):
+    """Differentiable full-range unary served through the folded pack — what
+    ``ApproxConfig(mode="folded_pack[_ref]").unary`` builds.  Same custom_jvp
+    shape as :func:`make_pack_fn`: forward through the fused kernel (or the jnp
+    oracle), tangents through the transported core chord slopes."""
+    if name not in FOLDABLE:
+        return make_pack_fn(pack, name, use_pallas=use_pallas,
+                            exact_d1=exact_d1, extrapolate=extrapolate)
+    _check_cores(pack, name)
+    if use_pallas:
+        from repro.kernels.table_pack_lookup import (folded_pack_grad_pallas,
+                                                     folded_pack_lookup_pallas)
+
+        fwd_impl = lambda v: folded_pack_lookup_pallas(pack, name, v)
+        fused_grad = lambda v: folded_pack_grad_pallas(pack, name, v)
+    else:
+        fwd_impl = lambda v: eval_folded_ref(pack, name, v)
+        fused_grad = None
+
+    @jax.custom_jvp
+    def f(x):
+        return fwd_impl(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        if exact_d1 is not None:
+            y = fwd_impl(x)
+            slope = exact_d1(x)
+        elif fused_grad is not None:
+            y, slope = fused_grad(x)
+        else:
+            y = fwd_impl(x)
+            slope = eval_folded_slope(pack, name, x)
+        return y, slope * dx
+
+    return f
+
+
+# --------------------------------------------------------------------------------------
+# routed dispatch (fold as jnp prologue/epilogue around the routed kernel)
+# --------------------------------------------------------------------------------------
+
+
+def _routed_core(pack, cname: str, r, use_pallas: bool):
+    """One core lookup through the ROUTED path with a uniform static fn_id."""
+    v = r.reshape(1, -1)
+    if use_pallas:
+        from repro.kernels.routed_pack_lookup import routed_pack_lookup_pallas
+
+        out = routed_pack_lookup_pallas(pack, [cname], v)
+    else:
+        out = eval_routed_ref(pack, [cname], v)
+    return out.reshape(r.shape)
+
+
+def eval_folded_routed(pack, name: str, x, *, use_pallas: bool,
+                       extrapolate: bool = False):
+    """``folded_routed_pack[_ref]`` evaluation: jnp fold prologue, core lookups
+    through the routed dispatch (runtime fn_ids), jnp reconstruction epilogue.
+
+    Only static names fold — the fold choice is made at trace time, so traced
+    fn_ids keep plain routed semantics (use :meth:`ApproxConfig.routed_fn`).
+    Kernel and oracle share this exact function (``use_pallas`` toggles only the
+    inner routed call), so the pair's bit parity follows from the routed
+    dispatch contract."""
+    if name not in FOLDABLE:
+        v = jnp.asarray(x).reshape(1, -1)
+        if use_pallas:
+            from repro.kernels.routed_pack_lookup import \
+                routed_pack_lookup_pallas
+
+            out = routed_pack_lookup_pallas(pack, [name], v,
+                                            extrapolate=extrapolate)
+        else:
+            out = eval_routed_ref(pack, [name], v, extrapolate=extrapolate)
+        return out.reshape(jnp.asarray(x).shape)
+    _check_cores(pack, name)
+    xf = jnp.asarray(x).astype(jnp.float32)
+    if name in ("sin", "cos"):
+        r, q, sflip = trig_fold(xf)
+        ys = _routed_core(pack, "sin_core", r, use_pallas)
+        yc = _routed_core(pack, "cos_core", r, use_pallas)
+        return trig_edges(xf, trig_reconstruct(name, ys, yc, q, sflip))
+    if name == "exp":
+        r, k = exp_fold(xf)
+        yc = _routed_core(pack, "exp_core", r, use_pallas)
+        return exp_edges(xf, exp_reconstruct(yc, k))
+    m, e = log_fold(xf)
+    yc = _routed_core(pack, "log_core", m, use_pallas)
+    return log_edges(xf, log_reconstruct(yc, e))
+
+
+def make_folded_routed_unary_fn(pack, name: str, *, use_pallas: bool = True,
+                                exact_d1=None, extrapolate: bool = False):
+    """Differentiable folded unary over the ROUTED core lookups — what
+    ``ApproxConfig(mode="folded_routed_pack[_ref]").unary`` builds.  Slopes run
+    through the jnp chain rule (:func:`eval_folded_slope`); like the plain
+    routed unary, every foldable member shares the routed executable."""
+    if name not in FOLDABLE:
+        return make_routed_unary_fn(pack, name, use_pallas=use_pallas,
+                                    exact_d1=exact_d1, extrapolate=extrapolate)
+
+    fwd_impl = lambda v: eval_folded_routed(pack, name, v,
+                                            use_pallas=use_pallas)
+
+    @jax.custom_jvp
+    def f(x):
+        return fwd_impl(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        y = fwd_impl(x)
+        slope = exact_d1(x) if exact_d1 is not None \
+            else eval_folded_slope(pack, name, x)
+        return y, slope * dx
+
+    return f

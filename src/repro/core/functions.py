@@ -255,3 +255,79 @@ register(
         notes="gate sigmoid; clamp error at +/-12 is 6.1e-6",
     )
 )
+
+
+# --------------------------------------------------------------------------------------
+# RangeFold members: full-period trig plus the canonical-interval cores the
+# reduction stage (core.range_reduce) folds onto.  sin/cos also work as plain
+# bounded-table members on one period; the *_core entries are what the folded
+# modes actually look up after reduction.
+# --------------------------------------------------------------------------------------
+
+register(
+    FunctionSpec(
+        name="sin",
+        f=lambda x, xp=np: xp.sin(x),
+        d1f=lambda x, xp=np: xp.cos(x),
+        d2f=lambda x, xp=np: -xp.sin(x),
+        interval=(-3.14159265, 3.14159265),
+        notes="one period as the bounded-table default; full f32 range via RangeFold",
+    )
+)
+
+register(
+    FunctionSpec(
+        name="cos",
+        f=lambda x, xp=np: xp.cos(x),
+        d1f=lambda x, xp=np: -xp.sin(x),
+        d2f=lambda x, xp=np: -xp.cos(x),
+        interval=(-3.14159265, 3.14159265),
+        notes="one period as the bounded-table default; full f32 range via RangeFold",
+    )
+)
+
+register(
+    FunctionSpec(
+        name="sin_core",
+        f=lambda x, xp=np: xp.sin(x),
+        d1f=lambda x, xp=np: xp.cos(x),
+        d2f=lambda x, xp=np: -xp.sin(x),
+        interval=(-0.79, 0.79),
+        notes="trig fold target: [-pi/4, pi/4] plus k-rounding guard band",
+    )
+)
+
+register(
+    FunctionSpec(
+        name="cos_core",
+        f=lambda x, xp=np: xp.cos(x),
+        d1f=lambda x, xp=np: -xp.sin(x),
+        d2f=lambda x, xp=np: -xp.cos(x),
+        interval=(-0.79, 0.79),
+        notes="trig fold target: [-pi/4, pi/4] plus k-rounding guard band",
+    )
+)
+
+register(
+    FunctionSpec(
+        name="exp_core",
+        f=lambda x, xp=np: xp.exp(x),
+        d1f=lambda x, xp=np: xp.exp(x),
+        d2f=lambda x, xp=np: xp.exp(x),
+        interval=(-0.36, 0.36),
+        abs_d2_monotone="increasing",
+        notes="exp fold target: [-ln2/2, ln2/2] plus guard band; exp(x)=2^k*exp_core(r)",
+    )
+)
+
+register(
+    FunctionSpec(
+        name="log_core",
+        f=lambda x, xp=np: xp.log(x),
+        d1f=lambda x, xp=np: 1.0 / x,
+        d2f=lambda x, xp=np: -1.0 / (x * x),
+        interval=(0.70, 1.42),
+        abs_d2_monotone="decreasing",
+        notes="log fold target: [sqrt2/2, sqrt2); log(x)=e*ln2+log_core(m)",
+    )
+)

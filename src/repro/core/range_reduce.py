@@ -1,0 +1,311 @@
+"""Argument range reduction: fold unbounded domains onto small canonical intervals.
+
+The paper's tables live on a fixed ``[x0, x0 + a)`` with clamp/extrapolate edges, so
+trig and exp over real input ranges stay out of reach of the pack.  This module is
+the reduction stage in front of the lookup (the RangeFold tentpole): fold the
+argument onto the canonical interval where a *small* table is accurate, look up
+there, and reconstruct the full-range value from exact bookkeeping (octant index,
+binary exponent).  Three folds are provided, all written in plain ``jax.numpy`` so
+the SAME code runs in the jnp oracles and inside the Pallas kernel bodies — the
+kernel/oracle bit-parity contract holds by construction, as for ``select_interval``.
+
+* **Trig** (``trig_fold``): ``x = k*(pi/2) + r`` with ``r in [-pi/4, pi/4]`` and the
+  quadrant ``q = k mod 4`` selecting sign/swap between ``sin_core``/``cos_core``.
+  Two regimes, blended with ``where``:
+
+  - Cody–Waite for ``|x| < 2048``: ``pi/2`` split into two exact 12-bit words plus
+    an f32 tail, so ``k*word`` is exact for ``|k| <= 1304`` and the three-step
+    subtraction cancels without rounding (measured ``|r|`` error < 3e-8 over the
+    regime).
+  - Payne–Hanek for ``|x| >= 2048``: fixed-point product of the 24-bit mantissa
+    against 192 bits of ``2/pi`` (twelve 16-bit limbs), accumulated mod ``2^32``
+    at scale ``2^29`` so the octant and the 29-bit fraction survive the huge
+    integer part that cancels mod 4.  Mantissa halves are 12-bit so every
+    ``12b x 16b`` partial product is exact in uint32.
+
+* **Exp** (``exp_fold``): ``exp(x) = 2^k * exp(r)``, ``k = round(x/ln2)``,
+  ``r in [-ln2/2, ln2/2]`` via a two-word Cody–Waite ``ln2``; reconstruction
+  builds ``2^k`` from the exponent field in two factors so gradual underflow and
+  overflow-to-inf match the exact exp.
+
+* **Log** (``log_fold``): ``x = m * 2^e`` with ``m in [sqrt2/2, sqrt2)`` straight
+  from the float's exponent field (subnormals pre-scaled by ``2^24``);
+  ``log(x) = e*ln2 + log_core(m)`` with the same split-``ln2`` summation.
+
+Accuracy note: the trig folds keep the table's ABSOLUTE Ea contract over the whole
+finite f32 range (the fraction kept by Payne–Hanek resolves ``r`` to ~5e-8, far
+below Ea=1e-4).  Folded ``exp`` necessarily has a RELATIVE contract
+``|err| <= Ea * max(1, |exp(x)|)`` — the ``2^k`` reconstruction scales the core
+table's absolute error — and folded ``log`` keeps the absolute contract up to the
+``e*ln2`` summation rounding (< 1e-5 over f32).  ``tests/harness/fullrange.py``
+verifies all of this against f64 numpy across every decade of the finite f32 range.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# --------------------------------------------------------------------------------------
+# Constants (derived offline from 100-digit pi / 60-digit ln2; see docs/range_reduction.md)
+# --------------------------------------------------------------------------------------
+
+# pi/2 = PIO2_HI + PIO2_MID + PIO2_LO + O(2e-15); HI/MID carry 12 significant bits
+# so k*HI and k*MID are exact f32 products for |k| <= 2^12.
+PIO2_HI = np.float32(1.5703125)
+PIO2_MID = np.float32(0.0004837512969970703)
+PIO2_LO = np.float32(7.54979e-08)
+TWO_OVER_PI = np.float32(0.63661975)
+# Cody–Waite k stays exact below this; Payne–Hanek takes over above.
+TRIG_CW_MAX = 2048.0
+# r = fraction * (pi/2) at the 2^-29 fixed-point scale kept by Payne–Hanek.
+PH_SCALE = np.float32(2.9258362e-09)
+# 192 fractional bits of 2/pi as twelve 16-bit limbs: limb j holds bits
+# 2^(-16j-1) .. 2^(-16j-16).  Matches the classic fdlibm expansion.
+PH_LIMBS = (0xA2F9, 0x836E, 0x4E44, 0x1529, 0xFC27, 0x57D1,
+            0xF534, 0xDDC0, 0xDB62, 0x9599, 0x3C43, 0x9041)
+
+# ln2 = LN2_HI + LN2_LO + O(6e-14); HI carries 16 bits so k*HI is exact for |k| <= 2^8.
+LN2_HI = np.float32(0.693145751953125)
+LN2_LO = np.float32(1.4286068e-06)
+INV_LN2 = np.float32(1.442695)
+# |k| clamp for exp: k1 = k//2 and k2 = k-k1 must stay valid normal exponents
+# ([-126, 126]); beyond the clamp the core-table edge clamp saturates to 0/inf.
+EXP_K_MAX = 252
+
+SQRT2 = np.float32(1.4142135)
+
+# Canonical core intervals (small guard bands over pi/4 = 0.7854 and ln2/2 = 0.3466
+# absorb the k-rounding half-integer boundary cases).
+SIN_CORE_INTERVAL = (-0.79, 0.79)
+COS_CORE_INTERVAL = (-0.79, 0.79)
+EXP_CORE_INTERVAL = (-0.36, 0.36)
+LOG_CORE_INTERVAL = (0.70, 1.42)
+
+
+def _jnp():
+    # Lazy: repro.core stays importable without jax (the design flow is numpy-only).
+    import jax.numpy as jnp
+
+    return jnp
+
+
+# --------------------------------------------------------------------------------------
+# Trig fold: x -> (r, q, sflip) with sin(x) = (-1)^sflip * [sin,cos,-sin,-cos][q](r)
+# --------------------------------------------------------------------------------------
+
+
+def _shift_mod32(jnp, v, s):
+    """``(v * 2^s) mod 2^32`` for uint32 ``v`` and int32 tensor ``s`` (negative =
+    truncating right shift).  XLA shifts are undefined at >= 32, so both
+    directions are clamped and the out-of-range lanes forced to zero (exact:
+    any uint32 times 2^(>=32) is 0 mod 2^32, and v >> (>=32) truncates to 0)."""
+    sl = jnp.clip(s, 0, 31).astype(jnp.uint32)
+    sr = jnp.clip(-s, 0, 31).astype(jnp.uint32)
+    out = jnp.where(s >= 0, jnp.left_shift(v, sl), jnp.right_shift(v, sr))
+    inrange = (s > -32) & (s < 32)
+    return jnp.where(inrange, out, jnp.uint32(0))
+
+
+def _payne_hanek(ax):
+    """Fixed-point ``|x| * 2/pi`` mod 8 at scale ``2^29`` -> (r, q).
+
+    ``acc`` accumulates ``y * 2^29 mod 2^32`` (y = ax * 2/pi): bit 31..29 are the
+    octant (integer part mod 8), bits 28..0 the fraction.  Rounding y to the
+    nearest integer and keeping the signed remainder gives ``|r| <= pi/4``.
+    """
+    jnp = _jnp()
+    import jax
+
+    b = jax.lax.bitcast_convert_type(ax.astype(jnp.float32), jnp.uint32)
+    e = ((b >> 23) & 0xFF).astype(jnp.int32)
+    m = (b & 0x7FFFFF) | 0x800000  # implicit leading bit (ax >= 2048 is normal)
+    mh = (m >> 12).astype(jnp.uint32)  # high 12 mantissa bits
+    ml = (m & 0xFFF).astype(jnp.uint32)  # low 12 mantissa bits
+    p = e - 150  # ax = m * 2^p with integer m in [2^23, 2^24)
+    acc = jnp.zeros_like(b)
+    for j, limb in enumerate(PH_LIMBS):
+        lj = jnp.uint32(limb)
+        s1 = p + 41 - 16 * (j + 1)  # mh*limb carries an extra 2^12
+        acc = acc + _shift_mod32(jnp, mh * lj, s1)
+        acc = acc + _shift_mod32(jnp, ml * lj, s1 - 12)
+    rounded = acc + jnp.uint32(1 << 28)
+    q = ((rounded >> 29) & 3).astype(jnp.int32)
+    fbits = (rounded & jnp.uint32((1 << 29) - 1)).astype(jnp.int32) - (1 << 28)
+    r = fbits.astype(jnp.float32) * PH_SCALE
+    return r, q
+
+
+def trig_fold(x):
+    """Fold f32 ``x`` for sin/cos: returns ``(r, q, sflip)``.
+
+    ``r in [-pi/4 - eps, pi/4 + eps]`` (inside ``SIN_CORE_INTERVAL``), ``q`` the
+    quadrant ``k mod 4`` of ``k = round(x * 2/pi)``, and ``sflip`` marks elements
+    folded through ``|x|`` (Payne–Hanek regime with ``x < 0``) whose SIN must be
+    negated on reconstruction (cos is even — no flip).  For ``|x| < pi/4`` the
+    fold is exact identity (``k = 0, r = x`` bitwise), which is what makes
+    folded and unfolded lookups bit-identical on the canonical interval.
+    Non-finite inputs produce garbage lanes the caller masks with ``isfinite``.
+    """
+    jnp = _jnp()
+    xf = jnp.asarray(x).astype(jnp.float32)
+    ax = jnp.abs(xf)
+    # Cody–Waite (signed, |x| < TRIG_CW_MAX): k*HI and k*MID exact, 3-step cancel.
+    kf = jnp.round(xf * TWO_OVER_PI)
+    kf = jnp.clip(kf, -4194304.0, 4194304.0)  # keep int32 cast defined on big lanes
+    r_cw = ((xf - kf * PIO2_HI) - kf * PIO2_MID) - kf * PIO2_LO
+    q_cw = jnp.mod(kf.astype(jnp.int32), 4)
+    # Payne–Hanek on |x| (sign restored via sflip).
+    r_ph, q_ph = _payne_hanek(ax)
+    big = ax >= TRIG_CW_MAX
+    r = jnp.where(big, r_ph, r_cw)
+    q = jnp.where(big, q_ph, q_cw)
+    sflip = big & (xf < 0)
+    return r, q, sflip
+
+
+def quadrant_select(kind: str, ys, yc, q):
+    """The octant swap/sign table: ``[ys, yc, -ys, -yc][q]`` for sin,
+    ``[yc, -ys, -yc, ys][q]`` for cos.  Also correct for the *derivative*
+    pattern when fed core slopes (d/dr of each branch follows the same cycle)."""
+    jnp = _jnp()
+    if kind == "sin":
+        return jnp.where(q == 0, ys, jnp.where(q == 1, yc, jnp.where(q == 2, -ys, -yc)))
+    if kind == "cos":
+        return jnp.where(q == 0, yc, jnp.where(q == 1, -ys, jnp.where(q == 2, -yc, ys)))
+    raise ValueError(f"quadrant_select kind must be sin/cos, got {kind!r}")
+
+
+def trig_reconstruct(kind: str, ys, yc, q, sflip):
+    """Reassemble sin(x) or cos(x) from core values at r plus fold bookkeeping."""
+    jnp = _jnp()
+    y = quadrant_select(kind, ys, yc, q)
+    if kind == "sin":
+        y = jnp.where(sflip, -y, y)
+    return y
+
+
+def trig_slope_reconstruct(kind: str, ds, dc, q, sflip):
+    """Chain-rule slope of the folded trig surrogate from CORE slopes at r.
+
+    d/dr of each quadrant branch follows the same select cycle as the values;
+    the inner derivative is +1 except on Payne–Hanek ``|x|`` lanes (``sflip``
+    tracks ``x < 0`` there), where sin's two negations cancel and cos picks up
+    the ``d|x|/dx = -1`` factor."""
+    jnp = _jnp()
+    sl = quadrant_select(kind, ds, dc, q)
+    if kind == "cos":
+        sl = jnp.where(sflip, -sl, sl)
+    return sl
+
+
+def trig_edges(xf, y):
+    """Non-finite trig inputs (inf, -inf, NaN) all map to NaN, like jnp.sin/cos."""
+    jnp = _jnp()
+    return jnp.where(jnp.isfinite(xf), y, jnp.nan)
+
+
+# --------------------------------------------------------------------------------------
+# Exp fold: exp(x) = 2^k * exp(r), r in [-ln2/2, ln2/2]
+# --------------------------------------------------------------------------------------
+
+
+def exp_fold(x):
+    """Fold f32 ``x`` for exp: returns ``(r, k)`` with ``exp(x) = 2^k * exp(r)``.
+
+    ``k`` is clamped to ``[-EXP_K_MAX, EXP_K_MAX]``; beyond the clamp ``r`` runs
+    off the core interval and the table's edge clamp saturates the result to the
+    correct 0 / inf once the ``2^k`` factors are applied.  ``|x| < ln2/2`` is the
+    exact identity (``k = 0, r = x`` bitwise)."""
+    jnp = _jnp()
+    xf = jnp.asarray(x).astype(jnp.float32)
+    kf = jnp.round(xf * INV_LN2)
+    kf = jnp.clip(kf, -float(EXP_K_MAX), float(EXP_K_MAX))
+    r = (xf - kf * LN2_HI) - kf * LN2_LO
+    return r, kf.astype(jnp.int32)
+
+
+def pow2(k):
+    """``2^k`` for int32 ``k in [-126, 127]`` straight from the exponent field."""
+    jnp = _jnp()
+    import jax
+
+    return jax.lax.bitcast_convert_type(
+        ((k + 127) << 23).astype(jnp.int32), jnp.float32)
+
+
+def exp_reconstruct(ycore, k):
+    """``ycore * 2^k`` in two exact power-of-two factors so ``2^k`` never leaves
+    the normal range: gradual underflow (subnormal outputs) and overflow-to-inf
+    come out right without special cases."""
+    k1 = k // 2
+    k2 = k - k1
+    return (ycore * pow2(k1)) * pow2(k2)
+
+
+def exp_edges(xf, y):
+    """Pin exp's non-finite edges to the exact values (NaN->NaN, +-inf)."""
+    jnp = _jnp()
+    y = jnp.where(xf == jnp.inf, jnp.inf, y)
+    y = jnp.where(xf == -jnp.inf, 0.0, y)
+    return jnp.where(jnp.isnan(xf), jnp.nan, y)
+
+
+# --------------------------------------------------------------------------------------
+# Log fold: x = m * 2^e, m in [sqrt2/2, sqrt2)
+# --------------------------------------------------------------------------------------
+
+
+def log_fold(x):
+    """Fold positive f32 ``x`` for log: returns ``(m, e)`` with ``x = m * 2^e`` and
+    ``m in [sqrt2/2, sqrt2)`` (inside ``LOG_CORE_INTERVAL``).  Subnormals are
+    normalized purely bitwise (count-leading-zeros shift) — arithmetic on them
+    would be flushed to zero on FTZ backends (XLA CPU, TPU), but bitcasts keep
+    the payload.  Non-positive and non-finite lanes produce garbage the caller
+    pins with ``log_edges``."""
+    jnp = _jnp()
+    import jax
+
+    xf = jnp.asarray(x).astype(jnp.float32)
+    b = jax.lax.bitcast_convert_type(xf, jnp.uint32)
+    mant = b & 0x7FFFFF
+    field = ((b >> 23) & 0xFF).astype(jnp.int32)
+    is_sub = (field == 0) & (mant != 0)
+    # Subnormal x = mant * 2^-149: shift the top set bit up to position 23 so the
+    # mantissa read below sees a normalized [1, 2) value; exponent follows the shift.
+    shift = jnp.clip(jax.lax.clz(mant).astype(jnp.int32) - 8, 0, 31)
+    mant = jnp.where(is_sub, jnp.left_shift(mant, shift.astype(jnp.uint32)), mant)
+    e = jnp.where(is_sub, -126 - shift, field - 127)
+    m = jax.lax.bitcast_convert_type(
+        (mant & 0x7FFFFF) | (np.uint32(127) << 23), jnp.float32)  # [1, 2)
+    half = m >= SQRT2
+    m = jnp.where(half, m * 0.5, m)  # exact halving into [sqrt2/2, sqrt2)
+    e = e + jnp.where(half, 1, 0)
+    return m, e.astype(jnp.float32)
+
+
+def log_reconstruct(ycore, e):
+    """``e*ln2 + log_core(m)`` with the split ``ln2`` summed small-terms-first."""
+    return e * LN2_HI + (ycore + e * LN2_LO)
+
+
+def log_edges(xf, y):
+    """Pin log's edges to the exact values: log(+-0) = -inf, log(x<0) = NaN,
+    log(inf) = inf, log(NaN) = NaN.
+
+    The zero / sign tests are BITWISE (via bitcast), not arithmetic: XLA CPU
+    flushes f32 subnormals to zero in comparisons (DAZ), so ``xf == 0`` is true
+    for subnormal inputs and would clobber the finite value :func:`log_fold`
+    recovers bitwise.  The bitcast view sees the real payload, which makes the
+    folded log MORE accurate than the backend's own ``jnp.log`` (which returns
+    -inf) on subnormal arguments."""
+    jnp = _jnp()
+    import jax.lax as lax
+
+    bits = lax.bitcast_convert_type(xf, jnp.uint32)
+    mag = bits & jnp.uint32(0x7FFFFFFF)
+    is_zero = mag == 0
+    is_neg = (bits >> 31) != 0
+    y = jnp.where(is_zero, -jnp.inf, y)
+    y = jnp.where(is_neg & ~is_zero, jnp.nan, y)
+    y = jnp.where(mag == jnp.uint32(0x7F800000), jnp.inf, y)
+    return jnp.where(mag > jnp.uint32(0x7F800000), jnp.nan, y)

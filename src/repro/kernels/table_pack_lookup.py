@@ -31,6 +31,10 @@ from jax.experimental import pallas as pl
 from repro.approx.table_pack import (PolyTablePack, QuantTablePack,
                                      ShardedTablePack, TablePack, poly_horner,
                                      poly_horner_d1)
+from repro.core.range_reduce import (exp_edges, exp_fold, exp_reconstruct,
+                                     log_edges, log_fold, log_reconstruct,
+                                     trig_edges, trig_fold, trig_reconstruct,
+                                     trig_slope_reconstruct)
 
 from .table_lookup import (DEFAULT_BLOCK_ROWS, LANE, _pinned, select_interval,
                            select_params, tile_activations, untile_activations)
@@ -789,3 +793,200 @@ def sharded_pack_grad_pallas(
         dy2d = cdy if dy2d is None else dy2d + cdy
     return (untile_activations(y2d, n, x.shape),
             untile_activations(dy2d, n, x.shape))
+
+
+# --------------------------------------------------------------------------------------
+# RangeFold kernels — fold prologue + core lookup(s) + reconstruction epilogue,
+# all fused in ONE kernel body (mode="folded_pack").
+# --------------------------------------------------------------------------------------
+#
+# The reduction (repro.core.range_reduce) folds the unbounded argument onto the
+# canonical core interval INSIDE the kernel — Cody-Waite / Payne-Hanek for trig,
+# exponent-field splits for exp/log — then the standard comparator-plane lookup
+# reads the core member(s) and the epilogue reapplies the exact bookkeeping
+# (octant sign/swap, 2^k scaling, e*ln2 shift).  Trig needs TWO static-fn_id
+# core reads per element (sin_core and cos_core feed the quadrant select); exp
+# and log need one.  Because the fold helpers are the same jnp functions the
+# oracle (repro.approx.range_fold.eval_folded_ref) calls, the kernel/oracle pair
+# is bit-identical by construction, like select_interval before it.
+
+
+def _folded_core_lookup(x, bounds_ref, invd_ref, base_ref, segs_ref, values,
+                        fid: int, n_intervals: int):
+    """One core-member read: identical op sequence to ``eval_pack_ref`` with
+    ``extrapolate=False`` (the cores never extrapolate — the fold guarantees
+    in-domain arguments up to the guard band, which clamps)."""
+    p, invd, base, segs = select_params(
+        x, bounds_ref[fid, :], invd_ref[fid, :], base_ref[fid, :],
+        segs_ref[fid, :], n_intervals)
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    y0 = jnp.take(values, a, axis=0, mode="clip")
+    y1 = jnp.take(values, a + 1, axis=0, mode="clip")
+    t = jnp.clip(u - i, 0.0, 1.0)
+    return y0 + t * (y1 - y0)
+
+
+def _folded_core_slope(x, bounds_ref, invd_ref, base_ref, segs_ref, values,
+                       fid: int, n_intervals: int):
+    """Chord slope of one core member — mirrors ``eval_pack_slope``."""
+    p, invd, base, segs = select_params(
+        x, bounds_ref[fid, :], invd_ref[fid, :], base_ref[fid, :],
+        segs_ref[fid, :], n_intervals)
+    i = jnp.clip(jnp.floor((x - p) * invd), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+    y0 = jnp.take(values, a, axis=0, mode="clip")
+    y1 = jnp.take(values, a + 1, axis=0, mode="clip")
+    slope = (y1 - y0) * invd
+    inside = (x >= bounds_ref[fid, 0]) & (x < bounds_ref[fid, n_intervals])
+    return slope * inside.astype(jnp.float32)
+
+
+def _folded_value(x, bounds_ref, invd_ref, base_ref, segs_ref, values, *,
+                  kind: str, fid_a: int, fid_b: int, n_a: int, n_b: int):
+    look = lambda v, fid, n: _folded_core_lookup(
+        v, bounds_ref, invd_ref, base_ref, segs_ref, values, fid, n)
+    if kind in ("sin", "cos"):
+        r, q, sflip = trig_fold(x)
+        y = trig_reconstruct(kind, look(r, fid_a, n_a), look(r, fid_b, n_b),
+                             q, sflip)
+        return trig_edges(x, y)
+    if kind == "exp":
+        r, k = exp_fold(x)
+        return exp_edges(x, exp_reconstruct(look(r, fid_a, n_a), k))
+    m, e = log_fold(x)
+    return log_edges(x, log_reconstruct(look(m, fid_a, n_a), e))
+
+
+def _folded_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref, values_ref,
+                   o_ref, *, kind: str, fid_a: int, fid_b: int, n_a: int,
+                   n_b: int):
+    x = x_ref[...].astype(jnp.float32)
+    y = _folded_value(x, bounds_ref, invd_ref, base_ref, segs_ref,
+                      values_ref[0, :], kind=kind, fid_a=fid_a, fid_b=fid_b,
+                      n_a=n_a, n_b=n_b)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _folded_grad_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref,
+                        values_ref, y_ref, dy_ref, *, kind: str, fid_a: int,
+                        fid_b: int, n_a: int, n_b: int):
+    from repro.approx.range_fold import _log_slope_mask, _log_slope_safe_x
+
+    x = x_ref[...].astype(jnp.float32)
+    values = values_ref[0, :]
+    y = _folded_value(x, bounds_ref, invd_ref, base_ref, segs_ref, values,
+                      kind=kind, fid_a=fid_a, fid_b=fid_b, n_a=n_a, n_b=n_b)
+    sl = lambda v, fid, n: _folded_core_slope(
+        v, bounds_ref, invd_ref, base_ref, segs_ref, values, fid, n)
+    if kind in ("sin", "cos"):
+        r, q, sflip = trig_fold(x)
+        slope = trig_slope_reconstruct(kind, sl(r, fid_a, n_a),
+                                       sl(r, fid_b, n_b), q, sflip)
+        slope = jnp.where(jnp.isfinite(x), slope, 0.0)
+    elif kind == "exp":
+        r, k = exp_fold(x)
+        slope = exp_reconstruct(sl(r, fid_a, n_a), k)
+        # zero overflowed-2^k lanes too (matches eval_folded_slope)
+        slope = jnp.where(jnp.isfinite(x) & jnp.isfinite(slope), slope, 0.0)
+    else:
+        m, e = log_fold(x)
+        slope = _log_slope_mask(x) * sl(m, fid_a, n_a) \
+            * (m / _log_slope_safe_x(x))
+    y_ref[...] = y.astype(y_ref.dtype)
+    dy_ref[...] = slope.astype(dy_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "kind", "fid_a",
+                              "fid_b", "n_a", "n_b"))
+def _folded_call(x2d, bounds, invd, base, segs, values, *, block_rows,
+                 interpret, kind, fid_a, fid_b, n_a, n_b):
+    grid, in_specs = _pack_specs(x2d, (bounds, invd, base, segs, values),
+                                 block_rows)
+    kernel = functools.partial(_folded_kernel, kind=kind, fid_a=fid_a,
+                               fid_b=fid_b, n_a=n_a, n_b=n_b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_rows, x2d.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, bounds, invd, base, segs, values)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "kind", "fid_a",
+                              "fid_b", "n_a", "n_b"))
+def _folded_call_grad(x2d, bounds, invd, base, segs, values, *, block_rows,
+                      interpret, kind, fid_a, fid_b, n_a, n_b):
+    grid, in_specs = _pack_specs(x2d, (bounds, invd, base, segs, values),
+                                 block_rows)
+    kernel = functools.partial(_folded_grad_kernel, kind=kind, fid_a=fid_a,
+                               fid_b=fid_b, n_a=n_a, n_b=n_b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((block_rows, x2d.shape[1]), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct(x2d.shape, x2d.dtype)] * 2,
+        interpret=interpret,
+    )(x2d, bounds, invd, base, segs, values)
+
+
+def _folded_prep(pack: TablePack, name: str, x, lane, block_rows, interpret):
+    from repro.approx.range_fold import FOLDABLE
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if name not in FOLDABLE:
+        raise KeyError(f"folded kernel serves {sorted(FOLDABLE)}, got {name!r}; "
+                       f"use table_pack_lookup_pallas for plain members")
+    cores = FOLDABLE[name]
+    fid_a = pack.member_id(cores[0])
+    fid_b = pack.member_id(cores[1]) if len(cores) > 1 else fid_a
+    x2d, block, n = tile_activations(x, lane, block_rows)
+    return fid_a, fid_b, x2d, block, n, interpret
+
+
+def folded_pack_lookup_pallas(
+    pack: TablePack,
+    name: str,
+    x: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Full-f32-range ``sin``/``cos``/``exp``/``log`` over a tensor: fold +
+    core lookup(s) + reconstruction fused in one kernel launch."""
+    fid_a, fid_b, x2d, block, n, interpret = _folded_prep(
+        pack, name, x, lane, block_rows, interpret)
+    out = _folded_call(
+        x2d, pack.boundaries, pack.inv_delta, pack.base, pack.seg_count,
+        pack.values.reshape(1, -1),
+        block_rows=block, interpret=interpret, kind=name, fid_a=fid_a,
+        fid_b=fid_b, n_a=pack.n_intervals[fid_a], n_b=pack.n_intervals[fid_b])
+    return untile_activations(out, n, x.shape)
+
+
+def folded_pack_grad_pallas(
+    pack: TablePack,
+    name: str,
+    x: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+):
+    """Fused (y, dy/dx) of the folded surrogate in one selector pass."""
+    fid_a, fid_b, x2d, block, n, interpret = _folded_prep(
+        pack, name, x, lane, block_rows, interpret)
+    y2d, dy2d = _folded_call_grad(
+        x2d, pack.boundaries, pack.inv_delta, pack.base, pack.seg_count,
+        pack.values.reshape(1, -1),
+        block_rows=block, interpret=interpret, kind=name, fid_a=fid_a,
+        fid_b=fid_b, n_a=pack.n_intervals[fid_a], n_b=pack.n_intervals[fid_b])
+    return untile_activations(y2d, n, x.shape), untile_activations(dy2d, n, x.shape)

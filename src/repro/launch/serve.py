@@ -68,6 +68,9 @@ def main():
                          "space planner (greedy member downgrade until the "
                          "pack fits; default keeps each function's Pareto-"
                          "cheapest candidate)")
+    ap.add_argument("--rope-table", action="store_true",
+                    help="serve rotary embeddings from the pack's folded trig"
+                         " members (any table mode; docs/range_reduction.md)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome-trace JSON of the run (open in "
                          "Perfetto; validate with tools/check_trace.py)")
@@ -94,7 +97,8 @@ def main():
 
         cfg = reduced(args.arch)
     if (args.approx_mode is not None or args.approx_ea is not None
-            or args.pack_shards is not None or args.pack_budget is not None):
+            or args.pack_shards is not None or args.pack_budget is not None
+            or args.rope_table):
         import dataclasses
 
         # override only what was passed; keep the config's other approx params
@@ -107,6 +111,8 @@ def main():
             kw["pack_shards"] = args.pack_shards
         if args.pack_budget is not None:
             kw["pack_budget"] = args.pack_budget
+        if args.rope_table:
+            kw["rope_table"] = True
         cfg = cfg.replace(approx=dataclasses.replace(cfg.approx, **kw))
     model = build_model(cfg)
     params = model.init(jax.random.key(0))

@@ -67,6 +67,9 @@ def main():
                          "space planner (greedy member downgrade until the "
                          "pack fits; default keeps each function's Pareto-"
                          "cheapest candidate)")
+    ap.add_argument("--rope-table", action="store_true",
+                    help="serve rotary embeddings from the pack's folded trig"
+                         " members (any table mode; docs/range_reduction.md)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome-trace JSON of the run (train.step / "
                          "train.ckpt / design-phase spans; open in Perfetto, "
@@ -89,7 +92,8 @@ def main():
                                         "..", "..", ".."))
         cfg = reduced_config(cfg)
     if (args.approx_mode is not None or args.approx_ea is not None
-            or args.pack_shards is not None or args.pack_budget is not None):
+            or args.pack_shards is not None or args.pack_budget is not None
+            or args.rope_table):
         import dataclasses
 
         # override only what was passed; keep the config's other approx params
@@ -102,6 +106,8 @@ def main():
             kw["pack_shards"] = args.pack_shards
         if args.pack_budget is not None:
             kw["pack_budget"] = args.pack_budget
+        if args.rope_table:
+            kw["rope_table"] = True
         cfg = cfg.replace(approx=dataclasses.replace(cfg.approx, **kw))
 
     mesh = None

@@ -75,9 +75,11 @@ def head_mask(geom) -> jax.Array:
 
 
 def project_qkv(p: Params, x: jax.Array, positions: Optional[jax.Array], *,
-                geom, rope_theta: float):
+                geom, rope_theta: float, rope_sin_cos=None):
     """x: (B,S,d) -> q (B,S,g_eff,Qg,D), k/v (B,S,g_eff,D) in normalized layout.
-    positions=None or rope_theta==0 skips RoPE (whisper-style absolute pos)."""
+    positions=None or rope_theta==0 skips RoPE (whisper-style absolute pos).
+    ``rope_sin_cos`` optionally serves the rotary trig from the approx pack
+    (``ApproxConfig.rope_sin_cos()``); None keeps exact jnp sin/cos."""
     B, S, _ = x.shape
     D = geom.d_head
     q = linear(p["wq"], x, "bsd,dhe->bshe")  # (B,S,h_eff,D)
@@ -90,8 +92,8 @@ def project_qkv(p: Params, x: jax.Array, positions: Optional[jax.Array], *,
         # positions: (S,) shared across the batch, or (B, S) per-slot clocks
         # (continuous batching: each slot decodes at its own absolute position)
         pos_b = positions if positions.ndim == 2 else positions[None, :]
-        q = apply_rope(q, pos_b, rope_theta)
-        k = apply_rope(k, pos_b, rope_theta)
+        q = apply_rope(q, pos_b, rope_theta, sin_cos=rope_sin_cos)
+        k = apply_rope(k, pos_b, rope_theta, sin_cos=rope_sin_cos)
     # normalize kv to g_eff groups on the ACTIVATION (params stay logical)
     if geom.repeat > 1:
         k = jnp.repeat(k, geom.repeat, axis=2)

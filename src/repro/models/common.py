@@ -75,12 +75,21 @@ def rope_freqs(d_head: int, theta: float) -> jax.Array:
     return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
 
 
-def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: (..., S, H, D) or (..., S, D); positions: broadcastable to (..., S)."""
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               sin_cos=None) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: broadcastable to (..., S).
+
+    ``sin_cos`` optionally replaces the exact jnp trig with a table-served
+    ``f(ang) -> (sin, cos)`` — models pass ``ApproxConfig.rope_sin_cos()``,
+    which folds the unbounded position*freq angles onto the pack's trig core
+    members (``rope_table=True``); ``None`` keeps exact rotations."""
     d = x.shape[-1]
     freqs = rope_freqs(d, theta)  # (D/2,)
     ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
-    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if sin_cos is None:
+        cos, sin = jnp.cos(ang), jnp.sin(ang)
+    else:
+        sin, cos = sin_cos(ang)
     if x.ndim == ang.ndim + 1:  # head axis present between S and D
         cos, sin = cos[..., None, :], sin[..., None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)

@@ -118,6 +118,9 @@ class BaseLM:
         self._cap_tanh = None
         if cfg.attn.logit_softcap > 0:
             self._cap_tanh = cfg.approx.unary("tanh")
+        # Rotary trig through the pack's folded sin/cos when rope_table is on
+        # (None = exact jnp rotations); every layer shares the cached pair.
+        self.rope_sin_cos = cfg.approx.rope_sin_cos()
 
     def loss(self, params, batch):
         logits, aux = self.train_logits(params, batch)
@@ -211,7 +214,8 @@ class DecoderLM(BaseLM):
         """Train/prefill block: attend within x.  Returns (x, (k, v), aux)."""
         cfg = self.cfg
         q, k, v = project_qkv(lp["attn"], rmsnorm(lp["ln1"], x), positions,
-                              geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta)
+                              geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta,
+                              rope_sin_cos=self.rope_sin_cos)
         o = flash_attention(q, k, v, positions, positions, causal=True, window=window)
         x = x + shard(attention_out(lp["attn"], o, cfg.attn_geom), "batch", None, None)
         x, aux = self._ffn(lp, x)
@@ -221,7 +225,8 @@ class DecoderLM(BaseLM):
         """Decode block: project 1 token, insert, attend over buffer."""
         cfg = self.cfg
         q, k, v = project_qkv(lp["attn"], rmsnorm(lp["ln1"], x), positions,
-                              geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta)
+                              geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta,
+                              rope_sin_cos=self.rope_sin_cos)
         kb, vb, _ = cache_insert(kb, vb, pb_new, k, v, positions)
         o = flash_attention(q, kb, vb, positions, pb_new, causal=True, window=window)
         x = x + shard(attention_out(lp["attn"], o, cfg.attn_geom), "batch", None, None)
@@ -494,7 +499,8 @@ class HybridLM(BaseLM):
     def _shared(self, sp, x, positions, kb=None, vb=None, pb=None):
         cfg = self.cfg
         q, k, v = project_qkv(sp["attn"], rmsnorm(sp["ln1"], x), positions,
-                              geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta)
+                              geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta,
+                              rope_sin_cos=self.rope_sin_cos)
         if kb is None:  # train/prefill: attend within x
             o = flash_attention(q, k, v, positions, positions, causal=True,
                                 window=cfg.attn.window)
@@ -784,7 +790,8 @@ class EncDecLM(BaseLM):
     def _dec_block(self, lp, x, positions, memory, mem_pos, self_kv=None, pb=None):
         cfg = self.cfg
         q, k, v = project_qkv(lp["self"], rmsnorm(lp["ln1"], x), positions,
-                              geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta)
+                              geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta,
+                              rope_sin_cos=self.rope_sin_cos)
         if self_kv is None:
             o = flash_attention(q, k, v, positions, positions, causal=True)
             new_kv = (k, v)

@@ -1,0 +1,1 @@
+"""Reusable differential test harnesses (imported by tests, runnable as CLIs)."""

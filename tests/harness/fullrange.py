@@ -1,0 +1,239 @@
+"""Full-f32-range differential harness for the folded transcendentals.
+
+The conformance matrix samples each member's design interval; this harness
+samples the ENTIRE finite f32 line — every decade from the subnormals to
+``3.4e38``, both signs, plus the adversarial sets where range reduction
+actually breaks (near-multiples of pi/2, exact powers of two, min/max
+normals, subnormals, zeros) — and checks the folded table path against
+float64 numpy, reporting per-decade max absolute error / max relative
+error / max ULP distance.
+
+Error contracts (see docs/range_reduction.md):
+
+* ``sin`` / ``cos``: ABSOLUTE — ``|err| <= Ea'`` everywhere (|f| <= 1, and
+  the Cody-Waite/Payne-Hanek fold keeps the reduced argument within ~3e-8
+  of exact, so the core-table bound survives reconstruction).
+* ``exp``: RELATIVE — ``|err| <= Ea' * max(1, |exp(x)|)``; the ``2^k``
+  reconstruction scales the core table's absolute error by ``2^k``.
+* ``log``: ABSOLUTE — ``e*ln2`` is applied in exact-ish two-word arithmetic,
+  so the core bound survives the shift.
+
+``Ea' = Ea * 1.02 + 1e-5`` matches the conformance-suite slack (f32 lerp
+rounding on top of the designed f64 bound).
+
+On XLA CPU (and TPU), f32 subnormal INPUTS flush to zero in arithmetic
+(DAZ): sin/exp see ``x = 0`` there, which keeps them inside the absolute
+contract trivially; the folded log recovers the true value bitwise (see
+``repro.core.range_reduce.log_fold``) and is checked at full strength.
+
+Usage:
+    pytest: ``from harness.fullrange import ...`` (tests/test_range_reduce.py)
+    CLI:    ``python tests/harness/fullrange.py --out REPORT_fullrange.json
+            [--fast] [--ea 1e-4]`` (the nightly CI artifact)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+import numpy as np
+
+FOLDED_FUNCS = ("sin", "cos", "exp", "log")
+
+# per-function f64 reference and error contract ("abs" | "rel")
+_REFS = {"sin": np.sin, "cos": np.cos, "exp": np.exp, "log": np.log}
+_CONTRACT = {"sin": "abs", "cos": "abs", "exp": "rel", "log": "abs"}
+
+_MIN_NORMAL = np.float32(1.1754944e-38)
+_MAX_FINITE = np.float32(3.4028235e38)
+
+
+def _near_pi_over_2_multiples(rng, per_k: int) -> np.ndarray:
+    """f32 values within a few ULPs of k*(pi/2) — where naive reduction loses
+    all its bits.  k spans small octants through the Payne-Hanek regime."""
+    ks = np.concatenate([
+        np.arange(1, 40),
+        rng.integers(40, 1304, 40),            # Cody-Waite regime
+        rng.integers(1304, 2**20, 40),         # Payne-Hanek, moderate
+        2 ** rng.integers(21, 60, 30),         # Payne-Hanek, huge
+    ]).astype(np.float64)
+    base = np.float32(ks * (math.pi / 2.0))
+    out = [base, -base]
+    for step in range(1, per_k + 1):
+        up = base.copy()
+        dn = base.copy()
+        for _ in range(step):
+            up = np.nextafter(up, np.float32(np.inf), dtype=np.float32)
+            dn = np.nextafter(dn, np.float32(-np.inf), dtype=np.float32)
+        out += [up, dn, -up, -dn]
+    return np.concatenate(out)
+
+
+def fullrange_samples(fast: bool = False, seed: int = 0) -> np.ndarray:
+    """Finite-f32 sample set: log-spaced decades 10^-45..10^38 (both signs),
+    subnormals, near-k*(pi/2), powers of two, extreme normals, zeros.
+
+    ``fast=True`` is the CI fast-tier 10^+-38 subsample (a few hundred points
+    per decade block instead of thousands)."""
+    rng = np.random.default_rng(seed)
+    per_decade = 40 if fast else 400
+    decades = np.arange(-45, 39)
+    mags = []
+    for d in decades:
+        # log-uniform within the decade, f32-rounded
+        e = rng.uniform(d, d + 1, per_decade)
+        mags.append(10.0 ** e)
+    mag = np.concatenate(mags)
+    with np.errstate(over="ignore"):
+        mag = mag[np.isfinite(mag.astype(np.float32))]
+    samples = [mag, -mag]
+    # subnormals: bit-level uniform over the subnormal payload range
+    n_sub = 50 if fast else 500
+    sub_bits = rng.integers(1, 1 << 23, n_sub, dtype=np.uint32)
+    sub = sub_bits.view(np.uint32).astype(np.uint32)
+    sub_f = np.frombuffer(sub.tobytes(), dtype=np.float32)
+    samples += [sub_f, -sub_f]
+    # the adversarial trig set
+    samples.append(_near_pi_over_2_multiples(rng, per_k=2 if fast else 4))
+    # exact powers of two across the exponent range (exp/log fold seams)
+    p2 = np.float32(2.0) ** np.arange(-126, 128, dtype=np.float32)
+    samples += [p2, -p2]
+    # extremes and zeros
+    samples.append(np.array([
+        0.0, -0.0, _MIN_NORMAL, -_MIN_NORMAL, _MAX_FINITE, -_MAX_FINITE,
+        np.nextafter(np.float32(0), np.float32(1), dtype=np.float32),
+        1.0, -1.0, math.pi / 4, -math.pi / 4, 2048.0, -2048.0,
+    ], dtype=np.float32))
+    x = np.concatenate([np.asarray(s, np.float32) for s in samples])
+    return x[np.isfinite(x)]
+
+
+def _ulp32(y64: np.ndarray) -> np.ndarray:
+    """ULP of the f32 nearest to each f64 reference value (inf-safe)."""
+    y32 = np.float64(np.float32(np.clip(y64, -1e38, 1e38)))
+    return np.spacing(np.abs(y32).astype(np.float32)).astype(np.float64)
+
+
+def differential_report(name: str, impl, x: np.ndarray, ea: float) -> dict:
+    """Run ``impl`` (f32 in/out, vectorized) over ``x`` against f64 numpy.
+
+    Returns a JSON-ready dict: overall + per-decade ``max_abs`` / ``max_rel``
+    / ``max_ulp`` / worst inputs, plus the bound verdict for this function's
+    contract.  Overflow lanes (|f64 ref| > f32 max) assert sign-correct inf
+    instead of joining the error stats; log's x<=0 lanes assert the IEEE edge
+    values."""
+    ref64 = _REFS[name]
+    if name == "log":
+        with np.errstate(divide="ignore", invalid="ignore"):
+            t = ref64(x.astype(np.float64))
+    else:
+        with np.errstate(over="ignore"):
+            t = ref64(x.astype(np.float64))
+    y = np.asarray(impl(x), np.float64)
+
+    edge_fail = 0
+    over = np.abs(t) > np.float64(_MAX_FINITE)
+    if over.any():
+        edge_fail += int(np.sum(np.sign(y[over]) * np.isinf(y[over]) !=
+                                np.sign(t[over])))
+    nonedge = ~over & np.isfinite(t)
+    if name == "log":
+        neg = x < 0
+        edge_fail += int(np.sum(~np.isnan(y[neg & (x != 0)])))
+        zero = x == 0
+        edge_fail += int(np.sum(y[zero] != -np.inf))
+        nonedge &= x > 0
+
+    xs, ys, ts = x[nonedge], y[nonedge], t[nonedge]
+    abs_err = np.abs(ys - ts)
+    rel_err = abs_err / np.maximum(1.0, np.abs(ts))
+    ulp_err = abs_err / _ulp32(ts)
+    bound = ea * 1.02 + 1e-5
+    err = rel_err if _CONTRACT[name] == "rel" else abs_err
+    n_over_bound = int(np.sum(err > bound))
+
+    dec = np.full(xs.shape, -99, np.int64)
+    nz = xs != 0
+    dec[nz] = np.floor(np.log10(np.abs(xs[nz].astype(np.float64)))).astype(np.int64)
+    per_decade = {}
+    for d in np.unique(dec):
+        m = dec == d
+        j = int(np.argmax(err[m]))
+        per_decade[str(int(d))] = {
+            "n": int(m.sum()),
+            "max_abs": float(abs_err[m].max()),
+            "max_rel": float(rel_err[m].max()),
+            "max_ulp": float(ulp_err[m].max()),
+            "worst_x": float(xs[m][j]),
+        }
+    j = int(np.argmax(err)) if err.size else 0
+    return {
+        "function": name,
+        "contract": _CONTRACT[name],
+        "ea": ea,
+        "bound": bound,
+        "n_samples": int(x.size),
+        "n_checked": int(xs.size),
+        "n_over_bound": n_over_bound,
+        "n_edge_fail": edge_fail,
+        "max_err": float(err[j]) if err.size else 0.0,
+        "worst_x": float(xs[j]) if err.size else 0.0,
+        "max_ulp": float(ulp_err.max()) if err.size else 0.0,
+        "passed": n_over_bound == 0 and edge_fail == 0,
+        "per_decade": per_decade,
+    }
+
+
+def run_harness(mode: str = "folded_pack_ref", ea: float = 1e-4,
+                fast: bool = False, seed: int = 0) -> dict:
+    """Build the folded config and report every foldable function."""
+    import jax.numpy as jnp
+
+    from repro.approx import ApproxConfig
+
+    cfg = ApproxConfig(mode=mode, e_a=ea)
+    x = fullrange_samples(fast=fast, seed=seed)
+    pad = (-len(x)) % 256
+    reports = {}
+    for name in FOLDED_FUNCS:
+        f = cfg.unary(name)
+
+        def impl(v, _f=f):
+            vp = np.pad(v, (0, pad)).reshape(1, -1)
+            return np.asarray(_f(jnp.asarray(vp)))[0, : len(v)]
+
+        reports[name] = differential_report(name, impl, x, ea)
+    return {"mode": mode, "fast": fast, "seed": seed,
+            "passed": all(r["passed"] for r in reports.values()),
+            "functions": reports}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="REPORT_fullrange.json")
+    ap.add_argument("--mode", default="folded_pack_ref")
+    ap.add_argument("--ea", type=float, default=1e-4)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI fast tier: ~10x fewer samples per decade")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    report = run_harness(mode=args.mode, ea=args.ea, fast=args.fast,
+                         seed=args.seed)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    for name, r in report["functions"].items():
+        print(f"{name:4s} [{r['contract']}] max_err={r['max_err']:.3e} "
+              f"(bound {r['bound']:.3e}) max_ulp={r['max_ulp']:.1f} "
+              f"over={r['n_over_bound']} edge_fail={r['n_edge_fail']} "
+              f"-> {'PASS' if r['passed'] else 'FAIL'}")
+    print(f"wrote {args.out}")
+    return 0 if report["passed"] else 1
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+    raise SystemExit(main())

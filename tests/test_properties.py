@@ -285,3 +285,87 @@ def test_any_partition_respects_bound(name, ea_exp, n_cuts, seed):
     sr = _finalize(fn, oracle, [lo, *cuts.tolist(), hi], ea, 0.3, "manual")
     ts = build_table(name, ea, lo, hi, algorithm="manual", split_result=sr)
     assert ts.max_error_on_grid(n=20_001) <= ea * (1 + 1e-6)
+
+
+# ------------------------------------------------------------------------------------
+# Invariant 8 (RangeFold): reduction identities through the table path
+# ------------------------------------------------------------------------------------
+#
+# The folded modes promise the MATHEMATICAL identities of the served functions,
+# not just pointwise Ea: periodicity for trig, the exp(x)*exp(-x)=1 group law,
+# and — the strongest one — bit-exact agreement with the unfolded core lookup
+# whenever the argument already lies in the canonical interval (the fold is an
+# identity there: k=0, r=x, and the reconstruction multiplies by 2^0 / selects
+# quadrant 0).  Subnormals are excluded from the bit-parity properties: XLA
+# flushes f32 subnormal ARITHMETIC (DAZ), so the fold's identity guarantee
+# starts at the normal range.
+
+_EA_FOLD = 1e-4
+
+
+def _fold_cfg():
+    from repro.approx import ApproxConfig
+
+    return ApproxConfig(mode="folded_pack_ref", e_a=_EA_FOLD)
+
+
+def _eval_folded(name, xs):
+    import jax.numpy as jnp
+
+    from repro.approx.range_fold import eval_folded_ref
+
+    x = np.asarray(xs, np.float32).reshape(1, -1)
+    return np.asarray(eval_folded_ref(_fold_cfg().pack(), name, jnp.asarray(x)))[0]
+
+
+@settings(deadline=None)
+@given(x=st.floats(-8.0, 8.0, allow_subnormal=False, width=32))
+def test_sin_periodicity_through_table(x):
+    """sin(x + 2pi) == sin(x) through the folded table path, within the Ea
+    contract on both evaluations plus the f32 rounding of x + 2pi."""
+    x2 = np.float32(np.float64(x) + 2.0 * math.pi)
+    a, b = _eval_folded("sin", [x, x, x, x]), _eval_folded("sin", [x2] * 4)
+    assert abs(float(a[0]) - float(b[0])) <= 2 * (_EA_FOLD * 1.02) + 1e-5
+
+
+@settings(deadline=None)
+@given(x=st.floats(-30.0, 30.0, allow_subnormal=False, width=32))
+def test_exp_group_law_through_table(x):
+    """exp(x) * exp(-x) == 1 through the folded table: each factor is within
+    the RELATIVE contract, so the product is within ~2x of it."""
+    e_pos, e_neg = _eval_folded("exp", [x] * 4), _eval_folded("exp", [-x] * 4)
+    assert abs(float(e_pos[0]) * float(e_neg[0]) - 1.0) <= 5e-4
+
+
+@settings(deadline=None)
+@given(x=st.floats(-0.78, 0.78, allow_subnormal=False, width=32))
+def test_folded_trig_bit_parity_on_core(x):
+    """|x| < pi/4: folded sin/cos == the raw core member lookup, BITWISE
+    (the fold is an identity and the reconstruction is transparent)."""
+    import jax.numpy as jnp
+
+    from repro.approx.range_fold import eval_folded_ref
+    from repro.approx.table_pack import eval_pack_ref
+
+    pack = _fold_cfg().pack()
+    v = jnp.asarray(np.full((1, 4), x, np.float32))
+    for name, core in (("sin", "sin_core"), ("cos", "cos_core")):
+        folded = np.asarray(eval_folded_ref(pack, name, v))
+        raw = np.asarray(eval_pack_ref(pack, core, v))
+        np.testing.assert_array_equal(folded, raw, err_msg=name)
+
+
+@settings(deadline=None)
+@given(x=st.floats(-0.34, 0.34, allow_subnormal=False, width=32))
+def test_folded_exp_bit_parity_on_core(x):
+    """|x| < ln2/2: folded exp == the raw exp_core lookup bitwise (k = 0)."""
+    import jax.numpy as jnp
+
+    from repro.approx.range_fold import eval_folded_ref
+    from repro.approx.table_pack import eval_pack_ref
+
+    pack = _fold_cfg().pack()
+    v = jnp.asarray(np.full((1, 4), x, np.float32))
+    folded = np.asarray(eval_folded_ref(pack, "exp", v))
+    raw = np.asarray(eval_pack_ref(pack, "exp_core", v))
+    np.testing.assert_array_equal(folded, raw)

@@ -1,0 +1,292 @@
+"""RangeFold: reduction math, folded modes, and the full-range differential
+contract.
+
+Layers under test:
+  1. ``repro.core.range_reduce`` — the raw folds against f64 numpy: Cody-Waite
+     + Payne-Hanek trig reduction (including near-multiples of pi/2 and huge
+     |x|), the ``2^k`` exp split, the bitwise (DAZ-immune) log mantissa split,
+     and the identity-on-core guarantee that backs the folded-vs-unfolded
+     bit-parity property.
+  2. ``repro.approx.range_fold`` + the fused kernels — kernel/oracle bit
+     parity under jit for the static AND routed folded shapes, fused-grad
+     parity, and finite tangents everywhere.
+  3. The full-range Ea contract via ``harness.fullrange`` (fast tier here;
+     the nightly CI job runs the dense tier and uploads the decade report).
+  4. Regression: ``eval_table_ref``/kernel agreement AT the domain edge
+     ``x = hi`` for both extrapolate flags (the lerp-parameter-vs-address-
+     clamp seam), pinned jit-to-jit.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from harness.fullrange import (FOLDED_FUNCS, differential_report,
+                               fullrange_samples, run_harness)
+from repro.approx import ApproxConfig, FOLDED_MODES, eval_folded_ref
+from repro.approx.jax_table import eval_table_ref, from_spec
+from repro.approx.range_fold import eval_folded_routed, eval_folded_slope
+from repro.core.flow import cached_table
+from repro.core.range_reduce import (EXP_CORE_INTERVAL, LOG_CORE_INTERVAL,
+                                     SIN_CORE_INTERVAL, TRIG_CW_MAX, exp_fold,
+                                     log_fold, trig_fold)
+from repro.kernels.table_lookup import table_lookup_pallas
+from repro.kernels.table_pack_lookup import (folded_pack_grad_pallas,
+                                             folded_pack_lookup_pallas)
+
+EA = 1e-4
+BOUND = EA * 1.02 + 1e-5
+
+
+def _pack(mode="folded_pack"):
+    return ApproxConfig(mode=mode, e_a=EA).pack()
+
+
+def _probe(seed=0, n=2048):
+    rng = np.random.default_rng(seed)
+    x = np.concatenate([
+        rng.uniform(-3, 3, n // 4),
+        rng.uniform(-TRIG_CW_MAX, TRIG_CW_MAX, n // 4),
+        np.float32(rng.uniform(-1, 1, n // 4)) * np.float32(1e38),
+        np.float32(10.0) ** rng.uniform(-40, 38, n // 4)
+        * rng.choice([-1, 1], n // 4),
+    ]).astype(np.float32)
+    specials = np.array([0.0, -0.0, 1e-38, -1e-38, math.pi / 2, -math.pi / 2,
+                         3 * math.pi / 2, TRIG_CW_MAX, -TRIG_CW_MAX, 1e20,
+                         -1e20, 1.0, math.pi / 4], np.float32)
+    x = np.concatenate([x, specials])
+    pad = (-len(x)) % 256
+    return np.pad(x, (0, pad))
+
+
+# ------------------------------------------------------------------------------------
+# 1. raw reduction math vs f64
+# ------------------------------------------------------------------------------------
+
+
+def test_trig_fold_reduces_exactly():
+    """r + q*(pi/2) (mod 2pi, with the sign flip) reproduces x: check via
+    sin/cos reassembled from the EXACT f64 trig of the reduced argument."""
+    x = _probe()
+    r, q, sflip = jax.jit(trig_fold)(jnp.asarray(x))
+    r, q, sflip = np.asarray(r, np.float64), np.asarray(q), np.asarray(sflip)
+    assert np.all(np.abs(r) <= math.pi / 4 + 1e-6)
+    ys, yc = np.sin(r), np.cos(r)
+    sin_rec = np.select([q == 0, q == 1, q == 2, q == 3], [ys, yc, -ys, -yc])
+    sin_rec = np.where(sflip, -sin_rec, sin_rec)
+    err = np.abs(sin_rec - np.sin(x.astype(np.float64)))
+    assert err.max() < 1e-6, err.max()
+
+
+def test_trig_fold_near_half_pi_multiples():
+    """The catastrophic-cancellation set: f32 neighbors of k*(pi/2)."""
+    ks = np.concatenate([np.arange(1, 50),
+                         2 ** np.arange(6, 58, dtype=np.int64)])
+    base = np.float32(ks.astype(np.float64) * (math.pi / 2))
+    xs = [base]
+    for _ in range(3):
+        xs.append(np.nextafter(xs[-1], np.float32(np.inf), dtype=np.float32))
+    x = np.concatenate([v for v in xs] + [-v for v in xs])
+    pad = (-len(x)) % 256
+    x = np.pad(x, (0, pad))
+    r, q, sflip = jax.jit(trig_fold)(jnp.asarray(x))
+    r, q, sflip = np.asarray(r, np.float64), np.asarray(q), np.asarray(sflip)
+    ys, yc = np.sin(r), np.cos(r)
+    sin_rec = np.select([q == 0, q == 1, q == 2, q == 3], [ys, yc, -ys, -yc])
+    sin_rec = np.where(sflip, -sin_rec, sin_rec)
+    err = np.abs(sin_rec - np.sin(x.astype(np.float64)))
+    assert err.max() < 1e-6, err.max()
+
+
+def test_exp_fold_split():
+    """exp(x) = 2^k * exp(r) with r in the core interval, to f64 accuracy."""
+    x = _probe(seed=1)
+    m = np.abs(x) < 88.0  # stay inside f64-comparable range
+    r, k = jax.jit(exp_fold)(jnp.asarray(x))
+    r, k = np.asarray(r, np.float64)[m], np.asarray(k, np.int64)[m]
+    lo, hi = EXP_CORE_INTERVAL
+    assert np.all((r >= lo) & (r <= hi))
+    rec = np.exp(r) * np.exp2(k.astype(np.float64))
+    t = np.exp(x.astype(np.float64)[m])
+    rel = np.abs(rec - t) / t
+    assert rel.max() < 1e-6, rel.max()
+
+
+def test_log_fold_split_bitwise_subnormals():
+    """x = m * 2^e with m in [~sqrt2/2, sqrt2); exact for subnormals too
+    (the mantissa normalization is bitwise, immune to XLA's DAZ flush)."""
+    rng = np.random.default_rng(2)
+    bits = rng.integers(1, 1 << 23, 300, dtype=np.uint32)
+    sub = np.frombuffer(bits.astype(np.uint32).tobytes(), np.float32)
+    x = np.concatenate([np.float32(10.0) ** rng.uniform(-38, 38, 700), sub])
+    x = np.pad(x.astype(np.float32), (0, (-len(x)) % 256), constant_values=1.0)
+    m, e = jax.jit(log_fold)(jnp.asarray(x))
+    m, e = np.asarray(m, np.float64), np.asarray(e, np.float64)
+    lo, hi = LOG_CORE_INTERVAL
+    assert np.all((m >= lo) & (m <= hi))
+    rec = np.log(m) + e * math.log(2.0)
+    err = np.abs(rec - np.log(x.astype(np.float64)))
+    assert err.max() < 1e-5, err.max()
+
+
+def test_identity_on_core_interval():
+    """|x| < pi/4: the fold is a bit-exact identity (k=0, r=x) — the basis of
+    the folded-vs-unfolded parity property."""
+    rng = np.random.default_rng(3)
+    x = np.float32(rng.uniform(-0.78, 0.78, 512))
+    r, q, sflip = trig_fold(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(r), x)
+    assert not np.asarray(q).any() and not np.asarray(sflip).any()
+    xr = np.float32(rng.uniform(-0.34, 0.34, 512))
+    r2, k = exp_fold(jnp.asarray(xr))
+    np.testing.assert_array_equal(np.asarray(r2), xr)
+    assert not np.asarray(k).any()
+
+
+# ------------------------------------------------------------------------------------
+# 2. folded modes: kernel/oracle parity and tangents
+# ------------------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FOLDED_FUNCS)
+def test_folded_kernel_bit_parity(name):
+    """Fused fold+lookup kernel == jnp oracle, bitwise under jit, across the
+    full range including non-finite lanes."""
+    pack = _pack()
+    x = jnp.asarray(np.concatenate([
+        _probe(seed=4), np.array([np.inf, -np.inf, np.nan], np.float32),
+        np.zeros(253, np.float32)]).reshape(1, -1))
+    got = np.asarray(folded_pack_lookup_pallas(pack, name, x))
+    want = np.asarray(jax.jit(lambda v: eval_folded_ref(pack, name, v))(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("name", FOLDED_FUNCS)
+def test_folded_grad_kernel_parity(name):
+    """Fused (y, dy) kernel: y bit-matches the value kernel, dy bit-matches
+    the jnp chain-rule slope oracle."""
+    pack = _pack()
+    x = jnp.asarray(_probe(seed=5).reshape(1, -1))
+    y, dy = folded_pack_grad_pallas(pack, name, x)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(folded_pack_lookup_pallas(pack, name, x)))
+    want = np.asarray(jax.jit(
+        lambda v: eval_folded_slope(pack, name, v))(x))
+    np.testing.assert_array_equal(np.asarray(dy), want)
+
+
+@pytest.mark.parametrize("name", FOLDED_FUNCS)
+def test_folded_routed_parity(name):
+    """Routed folded shape: kernel and oracle share the fold code; parity
+    reduces to the routed dispatch contract (jit-to-jit)."""
+    pack = _pack("folded_routed_pack")
+    x = jnp.asarray(_probe(seed=6).reshape(1, -1))
+    got = np.asarray(jax.jit(
+        lambda v: eval_folded_routed(pack, name, v, use_pallas=True))(x))
+    want = np.asarray(jax.jit(
+        lambda v: eval_folded_routed(pack, name, v, use_pallas=False))(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mode", FOLDED_MODES)
+def test_folded_unary_grads_finite(mode):
+    """Tangents through every folded unary are finite over the full range."""
+    cfg = ApproxConfig(mode=mode, e_a=EA)
+    x = jnp.asarray(_probe(seed=7).reshape(1, -1))
+    for name in FOLDED_FUNCS:
+        f = cfg.unary(name)
+        g = jax.grad(lambda v, _f=f: jnp.sum(jnp.where(
+            jnp.isfinite(_f(v)), _f(v), 0.0)))(x)
+        assert np.isfinite(np.asarray(g)).all(), (mode, name)
+
+
+def test_folded_mode_serves_plain_members_too():
+    """folded_* is a superset of the plain pack modes: non-foldable members
+    fall through bit-identically to table_pack / routed_pack."""
+    x = jnp.asarray(_probe(seed=8).reshape(1, -1))
+    for folded, plain in (("folded_pack", "table_pack"),
+                          ("folded_routed_pack", "routed_pack")):
+        pf = ApproxConfig(mode=folded, e_a=EA)
+        pp = ApproxConfig(mode=plain, e_a=EA,
+                          pack_functions=pf.pack().names)
+        got = np.asarray(jax.jit(pf.unary("gelu"))(x))
+        want = np.asarray(jax.jit(pp.unary("gelu"))(x))
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------------------------------
+# 3. the full-range differential contract (fast tier)
+# ------------------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["folded_pack", "folded_pack_ref"])
+def test_fullrange_ea_contract_fast(mode):
+    """sin/cos/exp/log meet their Ea contracts over the 10^+-38 log-spaced
+    subsample (the nightly job runs the dense tier)."""
+    report = run_harness(mode=mode, ea=EA, fast=True)
+    for name, r in report["functions"].items():
+        assert r["passed"], (mode, name, r["max_err"], r["worst_x"],
+                             r["n_edge_fail"])
+
+
+def test_harness_reports_per_decade():
+    """The report covers the decade spectrum it claims to sample."""
+    x = fullrange_samples(fast=True)
+    rep = differential_report("sin", lambda v: np.sin(v.astype(np.float64)),
+                              x, EA)
+    decades = sorted(int(d) for d in rep["per_decade"])
+    assert decades[0] <= -40 and decades[-1] >= 37
+    assert rep["passed"]
+
+
+# ------------------------------------------------------------------------------------
+# 4. regression: the x = hi edge seam (ISSUE 8 satellite bugfix)
+# ------------------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["gelu", "silu", "softplus", "tanh"])
+@pytest.mark.parametrize("extrapolate", [False, True])
+def test_table_edge_hi_kernel_ref_agree(name, extrapolate):
+    """At exactly ``x = hi`` (and its f32 neighbors) the jnp ref and the
+    Pallas kernel agree BITWISE under jit for both extrapolate flags: the
+    ref's unclamped last-segment lerp parameter and the kernel's address
+    clamp resolve to the same value.  Pinned as a regression — this seam is
+    where grid-sampled conformance can't look."""
+    spec = cached_table(name, EA, None, None, algorithm="hierarchical",
+                        omega=0.3)
+    jt = from_spec(spec)
+    b = np.asarray(jt.boundaries)
+    lo, hi = np.float32(b[0]), np.float32(b[jt.n_intervals])
+    probes = np.array([
+        lo, np.nextafter(lo, np.float32(-np.inf), dtype=np.float32),
+        np.nextafter(lo, np.float32(np.inf), dtype=np.float32),
+        hi, np.nextafter(hi, np.float32(-np.inf), dtype=np.float32),
+        np.nextafter(hi, np.float32(np.inf), dtype=np.float32),
+        hi + np.float32(1.0), lo - np.float32(1.0),
+    ], dtype=np.float32)
+    x = jnp.asarray(np.pad(probes, (0, 256 - len(probes))).reshape(1, -1))
+    ref = np.asarray(jax.jit(
+        lambda v: eval_table_ref(jt, v, extrapolate=extrapolate))(x))
+    ker = np.asarray(table_lookup_pallas(jt, x, extrapolate=extrapolate))
+    np.testing.assert_array_equal(ref, ker)
+
+
+def test_table_edge_hi_semantics():
+    """Value semantics AT the edge: extrapolate=False saturates at the hi
+    breakpoint value for all x >= hi; extrapolate=True continues the last
+    chord linearly beyond it."""
+    spec = cached_table("gelu", EA, None, None, algorithm="hierarchical",
+                        omega=0.3)
+    jt = from_spec(spec)
+    hi = np.float32(np.asarray(jt.boundaries)[jt.n_intervals])
+    probes = np.array([hi, hi + 1, hi + 100], np.float32)
+    x = jnp.asarray(np.pad(probes, (0, 253)).reshape(1, -1))
+    clamped = np.asarray(eval_table_ref(jt, x, extrapolate=False))[0, :3]
+    assert clamped[0] == clamped[1] == clamped[2]
+    ext = np.asarray(eval_table_ref(jt, x, extrapolate=True))[0, :3]
+    slope01 = ext[1] - ext[0]
+    assert abs((ext[2] - ext[1]) / 99.0 - slope01) < 1e-3
+    assert abs(float(clamped[0]) - float(ext[0])) < 1e-6

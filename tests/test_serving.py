@@ -14,6 +14,8 @@ full-size queues across cache families (local:global KV, SSM state, xLSTM
 state) are ``slow`` and join the nightly job.
 """
 
+import math
+
 import jax
 import numpy as np
 import pytest
@@ -338,3 +340,78 @@ class TestCounterLifecycle:
         assert eng.metrics.summary()["histograms"] == {}
         assert eng.batch_steps == 0 and eng.wasted_slot_steps == 0
         assert eng.compile_time_s == 0.0 and eng.wasted_fraction == 0.0
+
+
+class TestRopeTableServing:
+    """rope_table=True: rotary embeddings served from the folded trig tables
+    (PR 8).  The contract is end-to-end — switching ONLY the rotary path from
+    exact jnp sin/cos to the table-served fold must leave a greedy decode
+    token-identical, and the fold must hold its error bound at the 128k
+    positions a long-context cache would feed it."""
+
+    def test_rope_table_token_identical_greedy(self, tiny_model):
+        """Same arch, same params, same queue; the only delta between the two
+        engines is apply_rope's sin_cos hook.  Greedy streams must match
+        token for token through several refills.  At e_a=1e-6 the table trig
+        lands within the model's bf16 resolution, so the rotated activations
+        are bitwise identical and identity is exact, not probabilistic (at
+        1e-4 a ~4e-3 logit wobble can flip a greedy tie some steps in)."""
+        from repro.approx import ApproxConfig
+
+        base, _ = tiny_model
+        outs = []
+        for rope_table in (False, True):
+            cfg = base.cfg.replace(approx=ApproxConfig(
+                mode="folded_pack_ref", e_a=1e-6, omega=0.2,
+                rope_table=rope_table))
+            model = build_model(cfg)
+            assert (model.rope_sin_cos is not None) == rope_table
+            params = model.init(jax.random.key(0))
+            rng = np.random.default_rng(11)
+            reqs = mixed_requests(rng, 6, lo_new=2, hi_new=6)
+            eng = ContinuousEngine(model, params, batch_size=2, cache_len=64)
+            outs.append(eng.serve(reqs))
+        for i, (exact_r, table_r) in enumerate(zip(*outs)):
+            np.testing.assert_array_equal(exact_r.tokens, table_r.tokens,
+                                          err_msg=f"req {i}")
+            assert exact_r.steps == table_r.steps
+
+    def test_rope_parity_at_128k_positions(self):
+        """apply_rope with the table hook vs exact, at positions up to 128k
+        (angles deep in the Payne-Hanek regime for the base frequency).
+        Rotation error is bounded by |x1|*d_cos + |x2|*d_sin <= 2*Ea'."""
+        import jax.numpy as jnp
+
+        from repro.approx import ApproxConfig
+        from repro.models.common import apply_rope
+
+        ea = 1e-4
+        cfg = ApproxConfig(mode="folded_pack_ref", e_a=ea, rope_table=True)
+        sc = cfg.rope_sin_cos()
+        assert sc is not None
+        positions = jnp.asarray(
+            [[0, 1, 63, 4095, 65535, 131071, 131072]], jnp.int32)
+        rng = np.random.default_rng(12)
+        x = jnp.asarray(rng.uniform(-1, 1, (1, 7, 2, 16)), jnp.float32)
+        exact = apply_rope(x, positions, 10_000.0)
+        table = apply_rope(x, positions, 10_000.0, sin_cos=sc)
+        tol = 2 * (ea * 1.02 + 1e-5)
+        err = float(jnp.max(jnp.abs(exact - table)))
+        assert err <= tol, f"max rotation err {err:.3e} > {tol:.3e}"
+        # and the hook's raw trig is itself within the fold contract against
+        # float64 numpy at the largest angles the positions produce
+        ang = np.float32(131072.0)
+        s, c = sc(jnp.full((1, 256), ang))
+        bound = ea * 1.02 + 1e-5
+        assert abs(float(s[0, 0]) - math.sin(float(ang))) <= bound
+        assert abs(float(c[0, 0]) - math.cos(float(ang))) <= bound
+
+    def test_rope_sin_cos_gating(self):
+        """exact mode and rope_table=False both keep the exact path; an
+        unknown mode with rope_table on raises instead of silently serving."""
+        from repro.approx import ApproxConfig
+
+        assert ApproxConfig(mode="exact", rope_table=True).rope_sin_cos() is None
+        assert ApproxConfig(mode="folded_pack_ref").rope_sin_cos() is None
+        with pytest.raises(ValueError, match="unknown approx mode"):
+            ApproxConfig(mode="bogus", rope_table=True).rope_sin_cos()
