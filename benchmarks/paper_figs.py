@@ -7,7 +7,6 @@ human-readable block.  ``--full`` uses the paper's population sizes (slower).
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import numpy as np

@@ -13,7 +13,6 @@ import time
 
 from repro.approx import ApproxConfig
 from repro.models import ShapeSpec, build_model, get_config
-from repro.models.config import MoEConfig
 from repro.optim import adamw
 from repro.train.loop import TrainConfig, run
 

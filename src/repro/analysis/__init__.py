@@ -1,0 +1,22 @@
+"""repro.analysis — PackLint: static jaxpr-level contract checking.
+
+``jaxpr_lint`` holds the trace-inspection primitives, ``contracts`` the five
+registered contract rules over the live mode registry, and ``report`` the
+``REPORT_contracts.json`` serialization.  ``tools/check_contracts.py`` is the
+CLI; ``docs/static_analysis.md`` is the rule catalog.
+"""
+
+from .contracts import ALL_MODES, FAST_FUNCS, KERNEL_ALLOWED, LintContext, RULES, rule, run
+from .report import Finding, Report
+
+__all__ = [
+    "ALL_MODES",
+    "FAST_FUNCS",
+    "Finding",
+    "KERNEL_ALLOWED",
+    "LintContext",
+    "RULES",
+    "Report",
+    "rule",
+    "run",
+]

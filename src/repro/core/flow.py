@@ -9,12 +9,9 @@ because model constructors request the same handful of tables thousands of times
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import Optional
-
-import numpy as np
 
 from repro import obs
 

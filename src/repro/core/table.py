@@ -18,7 +18,7 @@ analogue of address clamping — so the spec is total on the reals.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np

@@ -14,7 +14,7 @@ contract (the checkpoint stores only ``step``).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

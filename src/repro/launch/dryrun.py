@@ -35,7 +35,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.pipeline import data_config_for
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model, get_config, input_specs, shapes_for
 from repro.models.registry import ARCH_IDS

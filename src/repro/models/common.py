@@ -107,7 +107,6 @@ def sinusoidal_positions(n: int, d: int) -> jax.Array:
 
 # Canonical home is the approx backend, which applies it to every table-mode
 # tanh automatically; re-exported here for the model-side callers.
-from repro.approx.activations import odd_extension  # noqa: E402
 
 
 def softcap(x: jax.Array, cap: float, tanh_fn=None) -> jax.Array:

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Tuple
 
 from repro.approx.activations import ApproxConfig
 
@@ -194,7 +194,6 @@ class ArchConfig:
             shared = attn_params() + glu_params(self.d_ff) + 2 * d
             return self.n_layers * per_ssm + shared + n_emb
         if self.family == XLSTM:
-            hd_m = d // self.n_heads
             per_m = 4 * d * d + d * 3 * self.n_heads + 2 * d + 2 * d * self.d_ff_x()
             per_s = 4 * d * 2 + 4 * d * d // 1 + 2 * d  # gates z,i,f,o as d->d
             n_m = (self.n_layers + 1) // 2

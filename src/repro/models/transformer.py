@@ -48,7 +48,7 @@ from .common import (
     softcap,
     unembed,
 )
-from .config import ENCDEC, MOE, SSM_HYBRID, VLM, XLSTM, ArchConfig
+from .config import MOE, ArchConfig
 from .mlp import glu, init_glu, init_mlp, init_moe, mlp, moe
 from .ssm import init_mamba2, init_ssm_cache, mamba2_block
 from .xlstm import (
@@ -361,7 +361,6 @@ class DecoderLM(BaseLM):
         so peak activation memory is O(chunk) instead of O(S).  Equivalent to
         ``prefill`` (tests/test_archs.py); the per-chunk step is one compiled
         program reused across chunks."""
-        cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
         if self.period != 1:
@@ -591,9 +590,6 @@ class HybridLM(BaseLM):
     def init_cache(self, batch: int, cache_len: int) -> Cache:
         cfg = self.cfg
         s = cfg.ssm
-        mk_ssm = lambda n: jax.tree.map(
-            lambda t: jnp.broadcast_to(t, (n,) + t.shape).copy() if n else t,
-            init_ssm_cache(batch, self.inner, s.state_dim, s.head_dim, s.conv_width))
         W = cache_len if cfg.attn.window == 0 else min(cfg.attn.window, cache_len)
         c = {
             "mamba": jax.tree.map(

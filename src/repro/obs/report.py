@@ -18,7 +18,7 @@ stdlib + numpy only.
 from __future__ import annotations
 
 import json
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 
 def load_trace(path: str) -> dict:

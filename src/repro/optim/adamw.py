@@ -6,9 +6,8 @@ Plain pytree implementation (no optax dependency): state = {m, v, count}.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,7 @@ from repro import obs
 from repro.data.pipeline import SyntheticLM
 from repro.optim import adamw
 from repro.parallel.params import param_pspecs, shardings_from_specs, zero1_pspecs
-from repro.parallel.sharding import default_rules, use_sharding
+from repro.parallel.sharding import use_sharding
 
 from .checkpoint import CheckpointManager
 

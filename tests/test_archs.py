@@ -2,7 +2,6 @@
 one train step on CPU, asserting shapes and no NaNs; plus prefill/decode parity
 checks (decode logits must match teacher-forced logits position by position)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ from repro.core import (
     footprint,
     get_function,
     hierarchical_split,
-    reference_spacing,
     run_flow,
     sequential_split,
     ttest2,

@@ -64,8 +64,6 @@ class TestAttnGeom:
         assert geom.g_eff % 16 == 0  # always shards the production model axis
 
     def test_mask_counts_real_heads(self):
-        import jax
-
         from repro.models.attention import head_mask
 
         for h, g in [(56, 8), (24, 2), (12, 12), (64, 4)]:

@@ -111,7 +111,6 @@ class TestPallasVsOracle:
 class TestGradients:
     def test_table_slope_matches_fd(self):
         """custom_jvp slope == finite difference of the surrogate (away from knots)."""
-        jt = _table("gelu", ea=1e-4)
         cfg = ApproxConfig(mode="table_ref", e_a=1e-4)
         f = cfg.unary("gelu")
         x = jnp.asarray(RNG.uniform(-6, 6, size=(256,)).astype(np.float32))

@@ -7,7 +7,6 @@ mesh, WUS layouts, elastic checkpoint restore onto a different mesh, and the
 spec builders' divisibility guarantees.
 """
 
-import json
 import os
 import subprocess
 import sys

@@ -38,8 +38,6 @@ from repro.core import (
     FixedPointFormat,
     build_table,
     chord_residual_ranges,
-    delta_for,
-    footprint,
     get_function,
     quantize_spec,
     refine_for_quantization,
@@ -272,7 +270,7 @@ def test_routed_quant_bit_identical_to_static(ids, seed, extr):
 def test_any_partition_respects_bound(name, ea_exp, n_cuts, seed):
     """Eq. 11 per sub-interval => bound holds for ARBITRARY partitions, not just
     the three algorithms' outputs (the paper's guarantee is partition-independent)."""
-    from repro.core.splitting import SplitResult, _finalize
+    from repro.core.splitting import _finalize
     from repro.core.spacing import SecondDerivMax
 
     fn = get_function(name)

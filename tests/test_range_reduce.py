@@ -31,8 +31,7 @@ from repro.approx.jax_table import eval_table_ref, from_spec
 from repro.approx.range_fold import eval_folded_routed, eval_folded_slope
 from repro.core.flow import cached_table
 from repro.core.range_reduce import (EXP_CORE_INTERVAL, LOG_CORE_INTERVAL,
-                                     SIN_CORE_INTERVAL, TRIG_CW_MAX, exp_fold,
-                                     log_fold, trig_fold)
+                                     TRIG_CW_MAX, exp_fold, log_fold, trig_fold)
 from repro.kernels.table_lookup import table_lookup_pallas
 from repro.kernels.table_pack_lookup import (folded_pack_grad_pallas,
                                              folded_pack_lookup_pallas)

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.models import build_model, get_config
+from repro.models import build_model
 from repro.optim import adamw
 from repro.train import CheckpointManager, TrainConfig, make_train_step, run
 from tests.test_archs import make_batch, reduced

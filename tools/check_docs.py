@@ -2,11 +2,20 @@
 
 The cross-mode conformance suite pins the CODE side of a new mode (it must
 join ``repro.approx.TABLE_MODES`` or tests/test_conformance.py fails); this
-script pins the DOCS side: every mode — ``exact`` plus the whole of
-``TABLE_MODES`` — must appear as a backticked row in BOTH the full matrix in
-docs/architecture.md and the summary matrix in README.md, and every doc page
-the architecture matrix links must exist.  CI runs it next to the bench
-smokes, so a PR that adds a mode without documenting it fails fast.
+script pins the DOCS side, in both directions:
+
+- forward drift: every mode — ``exact`` plus the whole of ``TABLE_MODES`` —
+  must appear as a backticked row in BOTH the full matrix in
+  docs/architecture.md and the summary matrix in README.md, and every doc
+  page the architecture matrix links must exist;
+- reverse drift: every row of those mode matrices must name a mode that the
+  registry still exposes, so renaming or retiring a mode without pruning its
+  doc rows fails just as loudly as adding one without documenting it;
+- bench reports: every committed repo-root ``BENCH_*.json`` must have a
+  schema section in benchmarks/README.md.
+
+CI runs it next to the bench smokes, so a PR that adds a mode without
+documenting it fails fast.
 
 Run:  PYTHONPATH=src python tools/check_docs.py
 """
@@ -46,6 +55,51 @@ def missing_modes(path: str) -> list[str]:
     return missing
 
 
+def mode_matrix_first_cells(path: str) -> list[str]:
+    """Backticked first-cell tokens of every data row in the mode matrices.
+
+    A mode matrix is any markdown table whose header row's first cell is
+    literally ``mode``; other tables in the same file are ignored.
+    """
+    cells = []
+    in_matrix = False
+    with open(path) as f:
+        for line in f:
+            stripped = line.lstrip()
+            if not stripped.startswith("|"):
+                in_matrix = False
+                continue
+            first = stripped.split("|")[1].strip()
+            if first == "mode":
+                in_matrix = True
+                continue
+            if not in_matrix or set(first) <= {"-", ":", " "}:
+                continue
+            m = re.fullmatch(r"`([^`]+)`", first)
+            if m:
+                cells.append(m.group(1))
+    return cells
+
+
+def unknown_modes(path: str) -> list[str]:
+    """Mode-matrix rows whose mode is not in the live registry."""
+    return [c for c in mode_matrix_first_cells(path) if c not in ALL_MODES]
+
+
+def undocumented_bench_reports() -> list[str]:
+    """Repo-root BENCH_*.json files with no schema section in benchmarks/README.md."""
+    readme = os.path.join(REPO, "benchmarks", "README.md")
+    if not os.path.exists(readme):
+        return sorted(
+            f for f in os.listdir(REPO)
+            if f.startswith("BENCH_") and f.endswith(".json"))
+    with open(readme) as f:
+        text = f.read()
+    return sorted(
+        f for f in os.listdir(REPO)
+        if f.startswith("BENCH_") and f.endswith(".json") and f not in text)
+
+
 def dangling_links(path: str) -> list[str]:
     """Relative .md links in the file that do not resolve on disk."""
     with open(path) as f:
@@ -72,9 +126,19 @@ def main() -> None:
             failures.append(
                 f"{rel}: mode matrix is missing {miss} — every ApproxConfig "
                 f"mode must appear as a backticked table row")
+        unknown = unknown_modes(path)
+        if unknown:
+            failures.append(
+                f"{rel}: mode matrix rows {unknown} are not registered "
+                f"ApproxConfig modes — prune or rename the doc rows")
         dead = dangling_links(path)
         if dead:
             failures.append(f"{rel}: dangling doc links {dead}")
+    orphans = undocumented_bench_reports()
+    if orphans:
+        failures.append(
+            f"benchmarks/README.md: no schema section for {orphans} — every "
+            f"committed BENCH_*.json must be documented there")
     if failures:
         print("docs drift check FAILED:")
         for f in failures:
