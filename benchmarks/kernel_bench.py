@@ -39,6 +39,9 @@ BENCH_POLYPACK_JSON = os.path.join(
 BENCH_RANGEFOLD_JSON = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_rangefold.json")
+BENCH_TABLEFLASH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_tableflash.json")
 
 
 def _time(f, *args, reps=20) -> float:
@@ -486,6 +489,132 @@ def rangefold_bench(size: int = 1 << 18, e_a: float = 1e-4,
     return rows
 
 
+def tableflash_bench(e_a: float = 1e-4, out_path: str = BENCH_TABLEFLASH_JSON
+                     ) -> List[tuple]:
+    """TableFlash error-vs-bound + decode throughput -> BENCH_tableflash.json.
+
+    Two sections.  ``flash_error``: a dense-causal flash attention call with
+    the running softmax served from the pack's ``exp_neg`` member (oracle and
+    fused Pallas variants) against exact ``jnp.exp`` flash — records the max
+    observed |table - exact| next to the derived contract bound
+    (``repro.core.attn_error.flash_abs_bound``; docs/table_flash.md) and the
+    headroom ratio.  ``decode``: the same reduced model greedily decoding the
+    same queue with ``attn_table`` off (exact flash) and on at Ea=1e-6, where
+    the end-to-end contract promises token-identical outputs — records
+    tokens/sec both ways and the parity bit.  The CI gate
+    (``tableflash_bench_gate``) enforces error <= bound per variant and token
+    parity; throughput is informational (CPU interpret-mode lookups price the
+    dispatch, not the TPU story).
+    """
+    from repro.approx import ApproxConfig
+    from repro.core.attn_error import flash_abs_bound
+    from repro.models import build_model, get_config
+    from repro.models.attention import flash_attention
+    from repro.serving.engine import DecodeEngine, Request, serve_static
+
+    # --- flash error vs the derived bound ---------------------------------
+    B, Sq, T, G, Qg, D = 2, 6, 48, 2, 2, 8
+    kv_chunk = 8
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(0, 1, (B, Sq, G, Qg, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, T, G, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, T, G, D)), jnp.float32)
+    q_pos = jnp.arange(T - Sq, T, dtype=jnp.int32)
+    k_pos = jnp.arange(T, dtype=jnp.int32)
+    run = jax.jit(lambda fn: flash_attention(q, k, v, q_pos, k_pos,
+                                             kv_chunk=kv_chunk, exp_fn=fn),
+                  static_argnums=0)
+    exact = run(None)
+    # conformance slop on the synthesis Ea, as in tests/test_table_flash.py
+    ea_eff = e_a * 1.02 + 1e-5
+    bound = flash_abs_bound(ea_eff, T, kv_chunk, float(jnp.max(jnp.abs(v))))
+    report = {"e_a": e_a,
+              "geometry": {"B": B, "Sq": Sq, "T": T, "G": G, "Qg": Qg, "D": D,
+                           "kv_chunk": kv_chunk},
+              "flash_error": {}, "decode": {}}
+    rows = []
+    for mode in ("table_pack_ref", "table_pack"):
+        fn = ApproxConfig(mode=mode, e_a=e_a, omega=0.2,
+                          attn_table=True).attn_exp()
+        err = float(jnp.max(jnp.abs(run(fn) - exact)))
+        t_ex = _time_min(run, None)
+        t_tab = _time_min(run, fn)
+        report["flash_error"][mode] = {
+            "max_abs_err": err, "bound": bound,
+            "headroom": round(bound / max(err, 1e-30), 1),
+            "exact_us": round(t_ex, 1), "table_us": round(t_tab, 1)}
+        rows.append((f"kernel.tableflash.{mode}.max_abs_err", f"{err:.3g}",
+                     f"bound={bound:.3g} ({bound / max(err, 1e-30):.0f}x "
+                     f"headroom) table={t_tab:.1f}us exact={t_ex:.1f}us"))
+        print(f"[tableflash] {mode:14s} max_err={err:.3g} bound={bound:.3g} "
+              f"({bound / max(err, 1e-30):.0f}x) table={t_tab:8.1f}us "
+              f"exact={t_ex:8.1f}us")
+
+    # --- greedy decode: exact flash vs table-served flash at Ea=1e-6 ------
+    rng = np.random.default_rng(9)
+    prompt_len, cache_len, vocab, batch = 8, 64, 128, 2
+    reqs = [Request(prompt=rng.integers(0, vocab, (prompt_len,))
+                    .astype(np.int32), max_new_tokens=16) for _ in range(4)]
+    decode = {}
+    for label, attn_table in (("exact_flash", False), ("table_flash", True)):
+        cfg = get_config("stablelm-3b").replace(
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+            d_ff=128, vocab=vocab, remat=False,
+            approx=ApproxConfig(mode="table_pack_ref", e_a=1e-6, omega=0.2,
+                                attn_table=attn_table))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        eng = DecodeEngine(model, params, batch, cache_len)
+        serve_static(model, params, reqs, batch, cache_len, engine=eng)  # warm
+        t_best, res = float("inf"), None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res = serve_static(model, params, reqs, batch, cache_len,
+                               engine=eng)
+            t_best = min(t_best, time.perf_counter() - t0)
+        useful = sum(r.steps for r in res)
+        decode[label] = {"tokens_per_s": round(useful / t_best, 1),
+                         "tokens": [np.asarray(r.tokens) for r in res]}
+    match = all(np.array_equal(a, b) for a, b in
+                zip(decode["exact_flash"]["tokens"],
+                    decode["table_flash"]["tokens"]))
+    report["decode"] = {
+        "e_a": 1e-6, "requests": len(reqs), "batch": batch,
+        "exact_flash_tok_s": decode["exact_flash"]["tokens_per_s"],
+        "table_flash_tok_s": decode["table_flash"]["tokens_per_s"],
+        "tokens_identical": bool(match)}
+    rows.append(("kernel.tableflash.decode_tok_s",
+                 decode["table_flash"]["tokens_per_s"],
+                 f"exact_flash={decode['exact_flash']['tokens_per_s']} "
+                 f"tokens_identical={match}"))
+    print(f"[tableflash] decode table={decode['table_flash']['tokens_per_s']} "
+          f"tok/s exact={decode['exact_flash']['tokens_per_s']} tok/s "
+          f"tokens_identical={match}")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"[tableflash] report -> {out_path}")
+    return rows
+
+
+def tableflash_bench_gate(report_path: str = BENCH_TABLEFLASH_JSON) -> None:
+    """CI smoke gate over BENCH_tableflash.json: every variant's observed
+    flash error must respect the derived contract bound, and the Ea=1e-6
+    greedy decode must be token-identical to exact flash."""
+    with open(report_path) as f:
+        report = json.load(f)
+    for mode, m in report["flash_error"].items():
+        if m["max_abs_err"] > m["bound"]:
+            raise SystemExit(
+                f"tableflash[{mode}]: observed error {m['max_abs_err']:.3g} "
+                f"> derived bound {m['bound']:.3g} — the attention error "
+                f"contract is violated")
+    if not report["decode"]["tokens_identical"]:
+        raise SystemExit(
+            "tableflash: Ea=1e-6 greedy decode diverged from exact flash — "
+            "the token-parity contract is violated")
+
+
 def shardedpack_bench(size: int = 1 << 18, e_a: float = 1e-4,
                       shard_counts=(2, 4),
                       out_path: str = BENCH_SHARDEDPACK_JSON) -> List[tuple]:
@@ -739,6 +868,9 @@ def main() -> None:
                     help="emit BENCH_rangefold.json (folded full-range "
                          "sin/cos/exp/log vs exact and vs the plain pack "
                          "kernel)")
+    ap.add_argument("--tableflash", action="store_true",
+                    help="emit BENCH_tableflash.json (flash error vs the "
+                         "derived bound + decode token parity and tok/s)")
     ap.add_argument("--size", type=int, default=None,
                     help="probe tensor size (default 2^18; 2^20 for "
                          "--routedpack so static and routed tile to the same "
@@ -777,6 +909,9 @@ def main() -> None:
     elif args.rangefold:
         rangefold_bench(args.size or (1 << 18), args.ea,
                         args.out or BENCH_RANGEFOLD_JSON)
+    elif args.tableflash:
+        tableflash_bench(args.ea, args.out or BENCH_TABLEFLASH_JSON)
+        tableflash_bench_gate(args.out or BENCH_TABLEFLASH_JSON)
     else:
         activation_bench(args.size or (1 << 18))
         interval_count_flatness()

@@ -57,6 +57,7 @@ def main() -> None:
     rows += kernel_bench.routed_dispatch_bench(1 << 20)
     rows += kernel_bench.shardedpack_bench(1 << 20 if args.full else 1 << 18)
     rows += kernel_bench.polypack_bench(1 << 20 if args.full else 1 << 18)
+    rows += kernel_bench.tableflash_bench()
     rows += kernel_bench.serve_bench(
         n_requests=16 if args.full else 8,
         modes=("exact", "table_pack") if args.full else ("exact",))

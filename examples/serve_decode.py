@@ -64,6 +64,9 @@ def main():
                          "refill (full decode batches); static = PR 1 "
                          "fixed-group baseline")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--attn-table", action="store_true",
+                    help="TableFlash: serve flash attention's softmax exponent"
+                         " from the pack's exp_neg member (table modes only)")
     ap.add_argument("--routed-demo", action="store_true",
                     help="run the per-slot routed-activation demo and exit")
     ap.add_argument("--trace", default=None, metavar="PATH",
@@ -85,7 +88,8 @@ def main():
     cfg = get_config("gemma3-12b").replace(
         n_layers=6, d_model=128, n_heads=4, n_kv_heads=2, d_head=32, d_ff=256,
         vocab=1024, remat=False,
-        approx=ApproxConfig(mode=args.mode, e_a=1e-4, omega=0.2),
+        approx=ApproxConfig(mode=args.mode, e_a=1e-4, omega=0.2,
+                            attn_table=args.attn_table),
     )  # a local:global sliding-window model end to end
     model = build_model(cfg)
     params = model.init(jax.random.key(0))

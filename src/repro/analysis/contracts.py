@@ -32,6 +32,11 @@ being lintable here fails the ``kernel_primitives`` rule's
                          the closure built with observability never imported
                          into the picture at all.
 
+The TableFlash closure (``ApproxConfig.attn_exp`` — the fused exp_neg lookup
+flash attention calls from its running-softmax step, docs/table_flash.md) is
+enrolled in rules 2, 4, and 5 alongside the mode matrix whenever the lint
+pack carries an ``exp_neg`` member.
+
 Everything is derived from ``jax.make_jaxpr`` / ``jax.eval_shape`` traces —
 no kernel is ever executed; the numerical side of these contracts lives in
 ``tests/test_conformance.py``.
@@ -69,6 +74,7 @@ from repro.approx import (
     from_quant_layout,
     from_spec,
     get_exact,
+    make_attn_exp_fn,
     make_folded_fn,
     make_folded_routed_unary_fn,
     make_pack_fn,
@@ -163,6 +169,10 @@ KERNEL_ALLOWED: Dict[str, frozenset] = {
     "_routed_quant_grad_kernel": _BASE | _SELECT | _ROUTED | _GRAD,
     "_routed_poly_kernel": _BASE | _SELECT | _ROUTED,
     "_routed_poly_grad_kernel": _BASE | _SELECT | _ROUTED | _GRAD,
+    # TableFlash: the fused exp_neg lookup flash attention calls in its
+    # running-softmax step — _pack_kernel's body plus address saturation
+    # (``max``, already in _BASE) and the underflow-to-zero tail select
+    "_tableflash_kernel": _BASE | frozenset({"lt", "select_n"}),
 }
 
 
@@ -352,6 +362,25 @@ class LintContext:
 
         return self._memo(key, build)
 
+    # ----------------------------- TableFlash -----------------------------
+
+    def attn_x(self) -> np.ndarray:
+        # flash attention feeds s - m_new <= 0; include a below-domain tail
+        # so the clamp path is part of the traced closure
+        return np.linspace(-20.0, 0.0, N_GRID).astype(np.float32)
+
+    def attn_traced(self, kind: str):
+        """Cached ClosedJaxpr of the TableFlash exp closure (value|grad)."""
+        key = ("attn_trace", kind)
+
+        def build():
+            fn = make_attn_exp_fn(self.pack(), use_pallas=True)
+            f = (fn if kind == "value"
+                 else (lambda v: jax.grad(lambda u: jnp.sum(fn(u)))(v)))
+            return jl.trace(f, self.attn_x())
+
+        return self._memo(key, build)
+
 
 # --------------------------------------------------------------------------------------
 # Rule registry
@@ -443,6 +472,28 @@ def rule_kernel_primitives(ctx: LintContext) -> List[Finding]:
                 bad = check_kernel(eqn, allowed)
                 out.append(Finding(
                     "kernel_primitives", f"kernel:{kname}[{mode}/{name}/{kind}]",
+                    not bad, "; ".join(bad[:6])))
+    # TableFlash: the attn_exp closure is its own runtime entry (a kernel the
+    # mode matrix never launches) — same obs-off + allowlist contract
+    if "exp_neg" in ctx.pack_names:
+        for kind in ("value", "grad"):
+            traced = ctx.attn_traced(kind)
+            cb = jl.closure_callbacks(traced)
+            out.append(Finding(
+                "kernel_primitives", f"closure:attn_exp/{kind}", not cb,
+                f"callback primitives on obs-off path: {cb}" if cb else ""))
+            for eqn in jl.pallas_eqns(traced):
+                kname = jl.kernel_name(eqn)
+                allowed = KERNEL_ALLOWED.get(kname)
+                if allowed is None:
+                    out.append(Finding(
+                        "kernel_primitives", f"kernel:{kname}", False,
+                        "unregistered kernel entry (attn_exp); add an "
+                        "allowlist row to analysis.contracts.KERNEL_ALLOWED"))
+                    continue
+                bad = check_kernel(eqn, allowed)
+                out.append(Finding(
+                    "kernel_primitives", f"kernel:{kname}[attn_exp/{kind}]",
                     not bad, "; ".join(bad[:6])))
     return out
 
@@ -656,6 +707,19 @@ def rule_vmem_budget(ctx: LintContext) -> List[Finding]:
                 out.append(check_budget(
                     jl.pack_resident_bytes(eqn), budget,
                     f"{mode}/{name}/{kind}{suffix}", allowance))
+    # TableFlash pins the same full-pack planes as _pack_kernel, so it is
+    # priced against the same PackLayout budget
+    if "exp_neg" in ctx.pack_names:
+        budget = ctx.layout().vmem().padded_bytes
+        for kind in ("value", "grad"):
+            eqns = jl.pallas_eqns(ctx.attn_traced(kind))
+            if not eqns:
+                out.append(Finding("vmem_budget", f"attn_exp/{kind}", False,
+                                   "no pallas_call in the attn_exp closure"))
+                continue
+            for eqn in eqns:
+                out.append(check_budget(jl.pack_resident_bytes(eqn), budget,
+                                        f"attn_exp/{kind}"))
     return out
 
 
@@ -709,4 +773,15 @@ def rule_obs_off_identity(ctx: LintContext) -> List[Finding]:
                        fp_never == fp_disabled,
                        "" if fp_never == fp_disabled else
                        "routed_fn obs-off closure differs structurally"))
+    # TableFlash's attn_exp has its own telemetry wrapper (approx.oob counter
+    # + count_mask protocol) — with telemetry off it must vanish structurally
+    if "exp_neg" in ctx.pack_names:
+        fp_never, fp_disabled = obs_identity_fingerprints(
+            lambda: ApproxConfig(mode="table_pack", e_a=ctx.e_a,
+                                 pack_functions=ctx.pack_names,
+                                 attn_table=True).attn_exp(), ctx.attn_x())
+        out.append(Finding("obs_off_identity", "attn_exp:table_pack",
+                           fp_never == fp_disabled,
+                           "" if fp_never == fp_disabled else
+                           "attn_exp obs-off closure differs structurally"))
     return out

@@ -45,11 +45,11 @@ from .range_fold import (FOLDABLE, FOLDED_CORE_MEMBERS, FOLDED_MODES,
                          make_folded_fn, make_folded_routed_unary_fn)
 from .table_pack import (PolyTablePack, QuantTablePack, ShardedTablePack,
                          TablePack, build_pack, build_poly_pack,
-                         build_quant_pack, build_sharded_pack, make_pack_fn,
-                         make_poly_pack_fn, make_quant_pack_fn,
-                         make_routed_fn, make_routed_unary_fn,
-                         make_sharded_pack_fn, member_domain,
-                         quant_saturation_counts)
+                         build_quant_pack, build_sharded_pack,
+                         make_attn_exp_fn, make_pack_fn, make_poly_pack_fn,
+                         make_quant_pack_fn, make_routed_fn,
+                         make_routed_unary_fn, make_sharded_pack_fn,
+                         member_domain, quant_saturation_counts)
 
 Mode = str  # "exact" | "table_ref" | "table_pallas" | "table_pack" |
 #             "table_pack_ref" | "quant_pack" | "quant_pack_ref" |
@@ -125,6 +125,9 @@ _SHARDED_PACK_CACHE: Dict[tuple, ShardedTablePack] = {}
 # one (sin, cos) closure pair per distinct rope_table configuration — every
 # layer's rotary shares the same compiled folded-trig executables
 _ROPE_SIN_COS_CACHE: Dict[tuple, Callable] = {}
+# one TableFlash exponent closure per distinct attn_table configuration —
+# every attention layer shares the same compiled exp_neg lookup executables
+_ATTN_EXP_CACHE: Dict[tuple, Callable] = {}
 
 _EXACT: Dict[str, Callable] = {
     "gelu": lambda x: jax.nn.gelu(x, approximate=False),
@@ -216,6 +219,11 @@ class ApproxConfig:
     # (any table mode; the f32 pack gains the trig core members).  Off keeps
     # exact jnp trig in the rotary embedding.
     rope_table: bool = False
+    # TableFlash: serve flash attention's running-softmax exponent from the
+    # pack's exp_neg member (any table mode; always the f32 pack, Pallas
+    # kernel vs jnp oracle decided by the mode).  Off keeps exact jnp.exp in
+    # the attention inner loop.  Error contract: repro.core.attn_error.
+    attn_table: bool = False
 
     def table_for(self, name: str) -> JaxTable:
         reg_name = _TABLE_NAME.get(name, name)
@@ -546,6 +554,71 @@ class ApproxConfig:
             cos_fn = make_folded_fn(pack, "cos", use_pallas=use_pallas)
             _ROPE_SIN_COS_CACHE[key] = lambda ang: (sin_fn(ang), cos_fn(ang))
         return _ROPE_SIN_COS_CACHE[key]
+
+    def attn_exp(self) -> Optional[Callable]:
+        """TableFlash exponent: ``None`` (exact jnp.exp in flash attention)
+        unless ``attn_table`` is on in a table mode, else ``f(z) -> exp(z)``
+        for z <= 0 through the pack's ``exp_neg`` member — underflow-to-zero
+        tail below lo (masked keys keep weight exactly 0, like exact f32
+        exp), Pallas kernel or jnp oracle by mode, always served from the
+        SAME f32 pack artifact as the activations (the rope_table precedent).
+        ``models/attention._flash_inner`` threads this as its ``exp_fn``
+        hook; the end-to-end error contract is :mod:`repro.core.attn_error`.
+        """
+        if not self.attn_table or self.mode == "exact":
+            return None
+        if self.mode not in TABLE_MODES:
+            raise ValueError(f"unknown approx mode {self.mode!r}")
+        names = tuple(self.pack_functions)
+        if "exp_neg" not in names:
+            raise KeyError(
+                f"attn_table needs 'exp_neg' in pack_functions={names}; add "
+                f"it to ApproxConfig.pack_functions to serve TableFlash")
+        overrides = tuple(sorted(self.interval_overrides.items()))
+        key = (self.mode, self.e_a, self.algorithm, self.omega, names,
+               overrides)
+        if key not in _ATTN_EXP_CACHE:
+            _ATTN_EXP_CACHE[key] = make_attn_exp_fn(
+                self.pack(), use_pallas=(self.mode in _PALLAS_BACKED))
+        return self._maybe_instrument_attn_exp(_ATTN_EXP_CACHE[key])
+
+    def _maybe_instrument_attn_exp(self, f):
+        """TableFlash clamp telemetry, decided at closure-build time like
+        :meth:`_maybe_instrument_unary` (obs off returns ``f`` untouched, so
+        the flash jaxpr stays bit-identical to a build without ScopeKit).
+
+        Counts only ``probe < lo`` underflow-to-zero events into
+        ``approx.oob.attn_exp``: z = 0 is the running max's own argument every
+        row and is PINNED in-domain (the x = hi edge semantics from the range
+        fold work), so counting it would drown the signal.  The wrapper
+        advertises ``wants_count_mask``; flash attention then passes
+        ``count_mask`` marking PAD key slots False — a genuine ``k_pos == -1``
+        empty cache slot still counts its underflow, a chunk-padding row
+        (KV_PAD sentinel) does not.
+        """
+        if not obs.device_telemetry_enabled():
+            return f
+        lo, _ = member_domain(self.pack(), "exp_neg")
+
+        def record(oob, total):
+            reg = obs.get_registry()
+            reg.counter("approx.oob.attn_exp").add(int(oob))
+            reg.counter("approx.lookups.attn_exp").add(int(total))
+
+        def instrumented(x, count_mask=None):
+            xf = jnp.asarray(x).astype(jnp.float32)
+            under = xf < lo
+            if count_mask is not None:
+                under = under & count_mask
+                total = jnp.sum(jnp.broadcast_to(
+                    count_mask, xf.shape).astype(jnp.int32))
+            else:
+                total = xf.size
+            jax.debug.callback(record, jnp.sum(under.astype(jnp.int32)), total)
+            return f(x)
+
+        instrumented.wants_count_mask = True
+        return instrumented
 
 
 EXACT = ApproxConfig(mode="exact")

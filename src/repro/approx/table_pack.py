@@ -471,6 +471,49 @@ def make_pack_fn(
     return f
 
 
+def make_attn_exp_fn(pack: TablePack, *, use_pallas: bool = True):
+    """TableFlash exponent: ``exp(z)`` for z <= 0 served from ``exp_neg``.
+
+    The closure flash attention threads as ``exp_fn`` (see
+    ``models.attention._flash_inner``).  Both running-softmax arguments are
+    non-positive by construction, so the member's [lo, 0] domain covers them
+    with an UNDERFLOW-TO-ZERO tail below lo: exp(z) < exp(lo) ~ 1.1e-7 there,
+    and returning exactly 0.0 matches f32 ``jnp.exp``'s own underflow for the
+    hugely-negative masked-key arguments — masked, empty, and pad slots carry
+    weight 0 in both the exact and the table path (a clamp-at-lo tail would
+    leak exp(lo) weight per masked slot, dominating E_a at decode's
+    ring-buffer occupancy).  The address math still clamps before the
+    selector; the zero select is on the raw z.  Fused inside the Pallas
+    kernel, explicit on the jnp oracle path — bit-identical under jit.
+    Tangent is the table slope, zeroed outside [lo, 0) like every
+    non-extrapolating member (the zero tail is constant), so gradients
+    through the scan stay finite.  Error contract:
+    :mod:`repro.core.attn_error`.
+    """
+    fid = pack.fn_id("exp_neg")
+    lo = float(pack.boundaries[fid, 0])
+    if use_pallas:
+        from repro.kernels.table_pack_lookup import tableflash_exp_pallas
+
+        fwd_impl = lambda v: tableflash_exp_pallas(pack, v)
+    else:
+        fwd_impl = lambda v: jnp.where(
+            v < lo, 0.0, eval_pack_ref(pack, fid, jnp.maximum(v, lo)))
+
+    @jax.custom_jvp
+    def f(x):
+        return fwd_impl(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        y = fwd_impl(x)
+        slope = eval_pack_slope(pack, fid, x)
+        return y, slope * dx
+
+    return f
+
+
 # --------------------------------------------------------------------------------------
 # PolyPack — planner-designed degree-d coefficient packs, Horner-evaluated on read.
 # --------------------------------------------------------------------------------------

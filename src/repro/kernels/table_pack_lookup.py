@@ -168,6 +168,87 @@ def table_pack_lookup_pallas(
 
 
 # --------------------------------------------------------------------------------------
+# TableFlash kernel — flash attention's softmax exponent from the exp_neg member.
+# --------------------------------------------------------------------------------------
+#
+# The running-softmax arguments (s - m_new, m - m_new) are <= 0 by construction
+# but can sit at -2e38 for masked/pad key slots (NEG_INF - m).  The kernel fuses
+# an UNDERFLOW-TO-ZERO tail in front of the standard selector: below the
+# member's lo edge the result is exactly 0.0, matching f32 ``jnp.exp``'s own
+# underflow for the hugely-negative masked-slot arguments — so masked, empty,
+# and pad key slots carry weight 0 in BOTH the exact and the table path (a
+# clamp-at-lo tail would instead give every masked slot a spurious exp(lo)
+# ~ 1.1e-7 weight, which at decode's ring-buffer occupancy dominates E_a).
+# The address math still clamps (``max(x, lo)``) so the ``(x - p) * inv_delta``
+# product never sees a 1e38-magnitude operand; the zero-tail select happens on
+# the RAW x afterwards.  Bit-identical to the jnp oracle under jit, asserted
+# in tests/test_table_flash.py.
+
+
+def _tableflash_kernel(x_ref, bounds_ref, invd_ref, base_ref, segs_ref,
+                       values_ref, o_ref, *, fn_id: int, n_intervals: int):
+    x_raw = x_ref[...].astype(jnp.float32)
+    lo = bounds_ref[fn_id, 0]
+    x = jnp.maximum(x_raw, lo)  # address saturation only
+
+    p, invd, base, segs = select_params(
+        x, bounds_ref[fn_id, :], invd_ref[fn_id, :], base_ref[fn_id, :],
+        segs_ref[fn_id, :], n_intervals)
+
+    u = (x - p) * invd
+    i = jnp.clip(jnp.floor(u), 0.0, segs - 1.0)
+    a = (base + i).astype(jnp.int32)
+
+    values = values_ref[0, :]
+    y0 = jnp.take(values, a, axis=0, mode="clip")
+    y1 = jnp.take(values, a + 1, axis=0, mode="clip")
+
+    t = jnp.clip(u - i, 0.0, 1.0)  # saturate: exp_neg never extrapolates
+    y = y0 + t * (y1 - y0)
+    # underflow-to-zero tail: exp(z) < exp(lo) ~ 1.1e-7 rounds to 0, exactly
+    # like the masked-slot exact path
+    o_ref[...] = jnp.where(x_raw < lo, 0.0, y).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "fn_id", "n_intervals"))
+def _tableflash_call(x2d, bounds, invd, base, segs, values, *, block_rows,
+                     interpret, fn_id, n_intervals):
+    grid, in_specs = _pack_specs(x2d, (bounds, invd, base, segs, values),
+                                 block_rows)
+    kernel = functools.partial(_tableflash_kernel, fn_id=fn_id,
+                               n_intervals=n_intervals)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_rows, x2d.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, bounds, invd, base, segs, values)
+
+
+def tableflash_exp_pallas(
+    pack: TablePack,
+    x: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    lane: int = LANE,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused clamp + exp_neg lookup over flash attention's exponent tensor."""
+    fid, x2d, block, n, interpret = _prep(pack, "exp_neg", x, lane, block_rows,
+                                          interpret)
+    out = _tableflash_call(
+        x2d, pack.boundaries, pack.inv_delta, pack.base, pack.seg_count,
+        pack.values.reshape(1, -1),
+        block_rows=block, interpret=interpret, fn_id=fid,
+        n_intervals=pack.n_intervals[fid],
+    )
+    return untile_activations(out, n, x.shape)
+
+
+# --------------------------------------------------------------------------------------
 # QuantPack kernels — int8/int16 codes VMEM-resident, dequantized on read.
 # --------------------------------------------------------------------------------------
 #

@@ -70,6 +70,10 @@ def main():
     ap.add_argument("--rope-table", action="store_true",
                     help="serve rotary embeddings from the pack's folded trig"
                          " members (any table mode; docs/range_reduction.md)")
+    ap.add_argument("--attn-table", action="store_true",
+                    help="TableFlash: serve flash attention's softmax exponent"
+                         " from the pack's exp_neg member (any table mode; "
+                         "docs/table_flash.md)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome-trace JSON of the run (train.step / "
                          "train.ckpt / design-phase spans; open in Perfetto, "
@@ -93,7 +97,7 @@ def main():
         cfg = reduced_config(cfg)
     if (args.approx_mode is not None or args.approx_ea is not None
             or args.pack_shards is not None or args.pack_budget is not None
-            or args.rope_table):
+            or args.rope_table or args.attn_table):
         import dataclasses
 
         # override only what was passed; keep the config's other approx params
@@ -108,6 +112,8 @@ def main():
             kw["pack_budget"] = args.pack_budget
         if args.rope_table:
             kw["rope_table"] = True
+        if args.attn_table:
+            kw["attn_table"] = True
         cfg = cfg.replace(approx=dataclasses.replace(cfg.approx, **kw))
 
     mesh = None

@@ -29,6 +29,13 @@ import jax.numpy as jnp
 from .common import Params, apply_rope, init_linear, linear
 
 NEG_INF = -2.0e38
+# Sentinel for CHUNK-PADDING key slots added inside _flash_inner (Tp > T).
+# Distinct from the genuine "empty cache slot" marker (k_pos == -1, written by
+# the cache init) so TableFlash underflow telemetry can exclude rows that exist
+# only because of the chunked scan's padding while still counting real empty
+# slots.  Any negative value masks identically (`valid = k_pos >= 0`); the
+# sentinel only matters to the obs `approx.oob.attn_exp` counter.
+KV_PAD = -(1 << 31)
 
 
 def init_attention(key, d_model: int, geom, qk_norm: bool = False,
@@ -107,13 +114,21 @@ def project_qkv(p: Params, x: jax.Array, positions: Optional[jax.Array], *,
 
 
 def _flash_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
-                 kv_chunk: int, scale: float):
+                 kv_chunk: int, scale: float, exp_fn=None):
     """Running-softmax attention for one q block over all kv chunks.
 
     q: (B, Sq, G, Qg, D); k/v: (B, T, G, D); positions: (Sq,) / (T,) shared
     across the batch, or (B, Sq) / (B, T) per-slot (continuous batching lets
     every batch slot run its own absolute clock and cache validity).
     Returns (B, Sq, G, Qg, D).
+
+    ``exp_fn`` optionally serves the two running-softmax exponents (whose
+    arguments are <= 0 by construction) from the pack's ``exp_neg`` member
+    (``ApproxConfig.attn_exp()``); None keeps exact ``jnp.exp``.  An
+    instrumented closure advertising ``wants_count_mask`` also receives a
+    ``count_mask`` excluding the KV_PAD chunk-padding slots from its
+    underflow telemetry — only on that telemetry path, so the obs-off jaxpr
+    stays identical to a build without ScopeKit.
     """
     B, Sq, G, Qg, D = q.shape
     T = k.shape[1]
@@ -125,9 +140,9 @@ def _flash_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         if k_pos.ndim == 1:
-            k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+            k_pos = jnp.pad(k_pos, (0, pad), constant_values=KV_PAD)
         else:
-            k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+            k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=KV_PAD)
     k = jnp.moveaxis(k.reshape(B, n_chunks, kv_chunk, G, D), 1, 0)
     v = jnp.moveaxis(v.reshape(B, n_chunks, kv_chunk, G, D), 1, 0)
     if k_pos.ndim == 1:
@@ -150,8 +165,18 @@ def _flash_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
             valid = valid & (kpb[:, None, :] > qp[:, :, None] - window)
         s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
-        p = jnp.exp(s - m_new[..., None])
-        alpha = jnp.exp(m - m_new)
+        if exp_fn is None:
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+        elif getattr(exp_fn, "wants_count_mask", False):
+            # pad rows are a chunking artifact, not approximation events
+            countable = (kpb != KV_PAD)[:, None, None, None, :]
+            p = exp_fn(s - m_new[..., None],
+                       count_mask=jnp.broadcast_to(countable, s.shape))
+            alpha = exp_fn(m - m_new)
+        else:
+            p = exp_fn(s - m_new[..., None])
+            alpha = exp_fn(m - m_new)
         l_new = l * alpha + p.sum(axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum(
             "bsgqt,btgd->bsgqd", p, vc.astype(jnp.float32))
@@ -168,10 +193,13 @@ def _flash_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
 
 
 def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True, window: int = 0,
-                    q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    exp_fn=None) -> jax.Array:
     """q: (B, S, G, Qg, D); k/v: (B, T, G, D). Positions are absolute token
     indices; negative k_pos marks empty cache slots.  Either positions operand
-    may carry a leading batch axis ((B, S) / (B, T)) for per-slot clocks."""
+    may carry a leading batch axis ((B, S) / (B, T)) for per-slot clocks.
+    ``exp_fn`` routes the softmax exponent through the exp_neg table
+    (TableFlash; see ``_flash_inner``)."""
     B, S, G, Qg, D = q.shape
     scale = D ** -0.5
     q_chunk = min(q_chunk, S)
@@ -192,7 +220,7 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True, window: int =
 
     inner = functools.partial(
         _flash_inner, k=k, v=v, k_pos=k_pos, causal=causal, window=window,
-        kv_chunk=kv_chunk, scale=scale)
+        kv_chunk=kv_chunk, scale=scale, exp_fn=exp_fn)
     if n_q == 1:
         out = inner(qs[:, 0], q_pos=qp[0])[:, None]
     else:

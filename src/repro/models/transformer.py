@@ -121,6 +121,10 @@ class BaseLM:
         # Rotary trig through the pack's folded sin/cos when rope_table is on
         # (None = exact jnp rotations); every layer shares the cached pair.
         self.rope_sin_cos = cfg.approx.rope_sin_cos()
+        # TableFlash: flash attention's softmax exponent through the pack's
+        # exp_neg member when attn_table is on (None = exact jnp.exp); every
+        # attention layer shares the cached closure.
+        self.attn_exp = cfg.approx.attn_exp()
 
     def loss(self, params, batch):
         logits, aux = self.train_logits(params, batch)
@@ -216,7 +220,8 @@ class DecoderLM(BaseLM):
         q, k, v = project_qkv(lp["attn"], rmsnorm(lp["ln1"], x), positions,
                               geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta,
                               rope_sin_cos=self.rope_sin_cos)
-        o = flash_attention(q, k, v, positions, positions, causal=True, window=window)
+        o = flash_attention(q, k, v, positions, positions, causal=True, window=window,
+                            exp_fn=self.attn_exp)
         x = x + shard(attention_out(lp["attn"], o, cfg.attn_geom), "batch", None, None)
         x, aux = self._ffn(lp, x)
         return x, (k, v), aux
@@ -228,7 +233,8 @@ class DecoderLM(BaseLM):
                               geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta,
                               rope_sin_cos=self.rope_sin_cos)
         kb, vb, _ = cache_insert(kb, vb, pb_new, k, v, positions)
-        o = flash_attention(q, kb, vb, positions, pb_new, causal=True, window=window)
+        o = flash_attention(q, kb, vb, positions, pb_new, causal=True, window=window,
+                            exp_fn=self.attn_exp)
         x = x + shard(attention_out(lp["attn"], o, cfg.attn_geom), "batch", None, None)
         x, _ = self._ffn(lp, x)
         return x, kb, vb
@@ -502,12 +508,12 @@ class HybridLM(BaseLM):
                               rope_sin_cos=self.rope_sin_cos)
         if kb is None:  # train/prefill: attend within x
             o = flash_attention(q, k, v, positions, positions, causal=True,
-                                window=cfg.attn.window)
+                                window=cfg.attn.window, exp_fn=self.attn_exp)
             new = (k, v)
         else:  # decode: insert then attend over buffer
             kb, vb, _ = cache_insert(kb, vb, pb, k, v, positions)
             o = flash_attention(q, kb, vb, positions, pb, causal=True,
-                                window=cfg.attn.window)
+                                window=cfg.attn.window, exp_fn=self.attn_exp)
             new = (kb, vb)
         x = x + shard(attention_out(sp["attn"], o, cfg.attn_geom), "batch", None, None)
         x = x + shard(glu(sp["mlp"], rmsnorm(sp["ln2"], x), self.act),
@@ -773,7 +779,8 @@ class EncDecLM(BaseLM):
         def body(x, lp):
             q, k, v = project_qkv(lp["attn"], rmsnorm(lp["ln1"], x), None,
                                   geom=cfg.attn_geom, rope_theta=0.0)
-            o = flash_attention(q, k, v, positions, positions, causal=False)
+            o = flash_attention(q, k, v, positions, positions, causal=False,
+                                exp_fn=self.attn_exp)
             x = x + shard(attention_out(lp["attn"], o, cfg.attn_geom), "batch", None, None)
             x = x + shard(mlp(lp["mlp"], rmsnorm(lp["ln2"], x), self.act),
                           "batch", None, None)
@@ -789,12 +796,14 @@ class EncDecLM(BaseLM):
                               geom=cfg.attn_geom, rope_theta=cfg.attn.rope_theta,
                               rope_sin_cos=self.rope_sin_cos)
         if self_kv is None:
-            o = flash_attention(q, k, v, positions, positions, causal=True)
+            o = flash_attention(q, k, v, positions, positions, causal=True,
+                                exp_fn=self.attn_exp)
             new_kv = (k, v)
         else:
             kb, vb = self_kv
             kb, vb, _ = cache_insert(kb, vb, pb, k, v, positions)
-            o = flash_attention(q, kb, vb, positions, pb, causal=True)
+            o = flash_attention(q, kb, vb, positions, pb, causal=True,
+                                exp_fn=self.attn_exp)
             new_kv = (kb, vb)
         x = x + shard(attention_out(lp["self"], o, cfg.attn_geom), "batch", None, None)
         # cross attention into encoder memory (no rope, bidirectional over memory)
@@ -802,7 +811,8 @@ class EncDecLM(BaseLM):
                                  geom=cfg.attn_geom, rope_theta=0.0)
         _, km, vm = project_qkv(lp["cross"], memory, None,
                                 geom=cfg.attn_geom, rope_theta=0.0)
-        ox = flash_attention(qx, km, vm, positions, mem_pos, causal=False)
+        ox = flash_attention(qx, km, vm, positions, mem_pos, causal=False,
+                             exp_fn=self.attn_exp)
         x = x + shard(attention_out(lp["cross"], ox, cfg.attn_geom), "batch", None, None)
         x = x + shard(mlp(lp["mlp"], rmsnorm(lp["ln2"], x), self.act),
                       "batch", None, None)

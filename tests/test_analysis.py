@@ -221,6 +221,93 @@ class TestObsIdentityRule:
 
 
 # --------------------------------------------------------------------------------------
+# TableFlash enrollment: the attn_exp closure rides rules 2/4/5 whenever the
+# lint pack carries exp_neg — with the same seeded-violation power checks
+# --------------------------------------------------------------------------------------
+
+class TestTableFlashLint:
+    @pytest.fixture(scope="class")
+    def actx(self):
+        # a pack that actually carries the exp_neg member TableFlash serves
+        return contracts.LintContext(funcs=("tanh", "exp_neg"))
+
+    def test_tableflash_kernel_allowlisted(self, actx):
+        for kind in ("value", "grad"):
+            eqns = jl.pallas_eqns(actx.attn_traced(kind))
+            assert eqns, "attn_exp pallas closure must lower a pallas_call"
+            for eqn in eqns:
+                name = jl.kernel_name(eqn)
+                assert name in contracts.KERNEL_ALLOWED
+                assert contracts.check_kernel(
+                    eqn, contracts.KERNEL_ALLOWED[name]) == []
+
+    def test_seeded_unallowlisted_primitive_fires(self, actx):
+        eqn = jl.pallas_eqns(actx.attn_traced("value"))[0]
+        bad = contracts.check_kernel(eqn, allowed=frozenset({"add", "mul"}))
+        assert any(b.startswith("unallowlisted:") for b in bad)
+
+    def test_vmem_budget_holds_and_seeded_inflation_fires(self, actx):
+        from repro.approx import make_attn_exp_fn
+
+        budget = actx.layout().vmem().padded_bytes
+        for kind in ("value", "grad"):
+            for eqn in jl.pallas_eqns(actx.attn_traced(kind)):
+                assert contracts.check_budget(
+                    jl.pack_resident_bytes(eqn), budget, "s").ok
+        pack = actx.pack()
+        fat = pack._replace(values=jnp.concatenate([pack.values] * 4))
+        traced = jl.trace(make_attn_exp_fn(fat, use_pallas=True),
+                          actx.attn_x())
+        resident = jl.pack_resident_bytes(jl.pallas_eqns(traced)[0])
+        assert not contracts.check_budget(resident, budget, "seeded").ok
+
+    def test_attn_exp_obs_off_identical(self, actx):
+        from repro.approx import ApproxConfig
+
+        fp_never, fp_disabled = contracts.obs_identity_fingerprints(
+            lambda: ApproxConfig(mode="table_pack", e_a=actx.e_a,
+                                 pack_functions=actx.pack_names,
+                                 attn_table=True).attn_exp(), actx.attn_x())
+        assert fp_never == fp_disabled
+
+    def test_telemetry_on_attn_exp_differs(self, actx):
+        # power check: with device telemetry ON the instrumented attn_exp is
+        # structurally different (a callback appears) — the difference rule 5
+        # proves absent when telemetry is off
+        from repro import obs
+        from repro.approx import ApproxConfig
+
+        kw = dict(mode="table_pack", e_a=actx.e_a,
+                  pack_functions=actx.pack_names, attn_table=True)
+        try:
+            obs.disable()
+            fp_never = jl.fingerprint(ApproxConfig(**kw).attn_exp(),
+                                      actx.attn_x())
+            obs.configure(enabled=True, device_telemetry=True)
+            fp_on = jl.fingerprint(ApproxConfig(**kw).attn_exp(),
+                                   actx.attn_x())
+        finally:
+            obs.disable()
+        assert fp_never != fp_on
+        assert "callback" in fp_on and "callback" not in fp_never
+
+    def test_rules_emit_attn_exp_findings(self, actx):
+        rep = contracts.run(actx, rules=["kernel_primitives", "vmem_budget"])
+        assert rep.ok, rep.summary()
+        subjects = {f.subject for f in rep.findings}
+        for s in ("closure:attn_exp/value", "closure:attn_exp/grad",
+                  "kernel:_tableflash_kernel[attn_exp/value]",
+                  "attn_exp/value", "attn_exp/grad"):
+            assert s in subjects, s
+
+    def test_no_exp_neg_pack_skips_cleanly(self, ctx):
+        # the base fixture's pack has no exp_neg: no attn findings, no error
+        rep = contracts.run(ctx, rules=["vmem_budget"])
+        assert rep.ok
+        assert not any("attn_exp" in f.subject for f in rep.findings)
+
+
+# --------------------------------------------------------------------------------------
 # The registry end-to-end (subsampled fast; the CLI gates the full matrix)
 # --------------------------------------------------------------------------------------
 

@@ -367,3 +367,80 @@ def test_folded_exp_bit_parity_on_core(x):
     folded = np.asarray(eval_folded_ref(pack, "exp", v))
     raw = np.asarray(eval_pack_ref(pack, "exp_core", v))
     np.testing.assert_array_equal(folded, raw)
+
+
+# --------------------------------------------------------------------------------------
+# Invariant 9 (TableFlash): flash attention is invariant to the kv-chunk split
+# --------------------------------------------------------------------------------------
+
+
+@settings(deadline=None)  # examples count comes from the ci/nightly profile
+@given(
+    t=st.integers(4, 12),
+    sq=st.integers(1, 4),
+    window=st.sampled_from([0, 3, 6]),
+    causal=st.booleans(),
+    clocks=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_chunk_invariance(t, sq, window, causal, clocks, seed):
+    """``_flash_inner``'s running softmax is a reduction: the kv_chunk split
+    must not change the output.  Exact path: invariant to f32 accumulation
+    order (tight allclose).  Table path: each chunking carries its own
+    provable bound vs exact flash, so two chunkings differ by at most the sum
+    of their bounds.  Geometry (window masking, per-slot (B, Sq) clocks with
+    genuine empty slots) is drawn by hypothesis.  Rows with NO valid key are
+    excluded, per the attn_error contract: the running max never leaves the
+    finite NEG_INF floor there, so every slot contributes exp(0) = 1 and the
+    renormalized garbage depends on the pad count (callers mask such rows)."""
+    import jax.numpy as jnp
+
+    from repro.approx import ApproxConfig
+    from repro.core.attn_error import flash_abs_bound
+    from repro.models.attention import flash_attention
+
+    rng = np.random.default_rng(seed)
+    B, G, QG, D = 2, 2, 2, 4
+    q = jnp.asarray(rng.normal(0, 1, (B, sq, G, QG, D)), np.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, t, G, D)), np.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, t, G, D)), np.float32)
+    if clocks:
+        offs = rng.integers(0, 3, B)
+        q_pos = jnp.asarray(np.stack([t - sq + o + np.arange(sq)
+                                      for o in offs]).astype(np.int32))
+        kp = np.tile(np.arange(t, dtype=np.int32), (B, 1))
+        kp[:, -1] = -1  # one genuine empty cache slot per row
+        k_pos = jnp.asarray(kp)
+    else:
+        q_pos = jnp.arange(t - sq, t, dtype=jnp.int32)
+        k_pos = jnp.arange(t, dtype=jnp.int32)
+
+    # rows with no valid key are outside the contract — mask them out
+    qp2 = np.atleast_2d(np.asarray(q_pos))          # (1|B, Sq)
+    kp2 = np.atleast_2d(np.asarray(k_pos))          # (1|B, T)
+    ok = kp2[:, None, :] >= 0
+    if causal:
+        ok = ok & (kp2[:, None, :] <= qp2[:, :, None])
+    if window > 0:
+        ok = ok & (kp2[:, None, :] > qp2[:, :, None] - window)
+    row_ok = np.broadcast_to(ok.any(-1), (B, sq))[:, :, None, None, None]
+
+    table_fn = ApproxConfig(mode="table_pack_ref", e_a=1e-4, omega=0.2,
+                            attn_table=True).attn_exp()
+    ea_eff = 1e-4 * 1.02 + 1e-5
+    v_max = float(jnp.max(jnp.abs(v)))
+    for exp_fn, label in ((None, "exact"), (table_fn, "table")):
+        outs = {}
+        for c in (1, 3, 8, t):
+            outs[c] = np.asarray(flash_attention(
+                q, k, v, q_pos, k_pos, causal=causal, window=window,
+                kv_chunk=c, exp_fn=exp_fn)) * row_ok
+        for c in (1, 3, 8):
+            if exp_fn is None:
+                tol = 1e-5  # f32 accumulation-order slop only
+            else:
+                tol = (flash_abs_bound(ea_eff, t, c, v_max)
+                       + flash_abs_bound(ea_eff, t, t, v_max) + 1e-5)
+            np.testing.assert_allclose(
+                outs[c], outs[t], atol=tol, rtol=0,
+                err_msg=f"{label} kv_chunk={c} vs {t}")

@@ -1,0 +1,277 @@
+"""TableFlash: flash attention's running-softmax exponent served from the
+pack's exp_neg member, gated by an end-to-end error contract.
+
+Three layers of checks:
+
+1. Flash-level: for EVERY table mode and four attention geometries (dense
+   causal, local sliding window, per-slot decode clocks with empty cache
+   slots, non-causal cross attention), ``max |table-flash - exact-flash|``
+   stays inside the provable row-wise bound from ``repro.core.attn_error``,
+   and gradients through the table path are finite everywhere (including the
+   clamped tail, whose custom-JVP slope is 0).
+2. Kernel parity: the fused Pallas lookup is BITWISE identical to the jnp
+   oracle path under jit, including the underflow-to-zero tail (for z < lo
+   both return exactly 0.0 — the same weight exact f32 exp gives every
+   masked/empty/pad key slot).
+3. Serving: at E_a = 1e-6 the per-lookup error sits below the model's bf16
+   resolution, so a greedy decode with ``attn_table=True`` must be
+   TOKEN-IDENTICAL to the exact engine — through both ``serve_static`` and
+   the ContinuousEngine's refill queue, on all four paper configs (stablelm
+   fast; gemma3 local:global, zamba2 hybrid, xlstm are nightly ``slow``).
+
+Plus the KV_PAD telemetry regression: chunk-padding key slots added inside
+``_flash_inner`` must NOT count as clamp events in ``approx.oob.attn_exp``,
+while genuine ``k_pos == -1`` empty cache slots still do.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.approx import TABLE_MODES, ApproxConfig, make_attn_exp_fn
+from repro.core.attn_error import (EXP_NEG_LO, flash_abs_bound, lookup_delta,
+                                   weight_error)
+from repro.models import build_model
+from repro.models.attention import KV_PAD, flash_attention
+from repro.serving.engine import ContinuousEngine, serve_static
+from tests.test_archs import reduced
+from tests.test_serving import mixed_requests
+
+EA = 1e-4
+# table specs may overshoot e_a by the conformance slop (matches the rope
+# parity test's allowance); fold it into the per-lookup delta fed to the bound
+EA_EFF = EA * 1.02 + 1e-5
+
+# Flash-level geometries: (causal, window, clocks, empty_slots) — the masking
+# regimes the four paper configs exercise, at tiny shapes
+GEOMETRIES = {
+    "dense_causal": dict(causal=True, window=0, clocks=False, empty=False),
+    "local_window": dict(causal=True, window=8, clocks=False, empty=False),
+    "decode_clocks": dict(causal=True, window=0, clocks=True, empty=True),
+    "cross_attn": dict(causal=False, window=0, clocks=False, empty=False),
+}
+B, SQ, T, G, QG, D = 2, 6, 24, 2, 2, 8
+KV_CHUNK = 8
+
+
+def _inputs(geom, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 1, (B, SQ, G, QG, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, T, G, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, T, G, D)), jnp.float32)
+    if geom["clocks"]:
+        # per-slot decode clocks: each batch row at its own absolute offset
+        q_pos = jnp.asarray([[T - SQ + i for i in range(SQ)],
+                             [T - SQ + 3 + i for i in range(SQ)]], jnp.int32)
+        k_pos = np.tile(np.arange(T, dtype=np.int32), (B, 1))
+        if geom["empty"]:
+            k_pos[:, T - 2:] = -1  # genuine empty cache slots
+        k_pos = jnp.asarray(k_pos)
+    else:
+        q_pos = jnp.arange(T - SQ, T, dtype=jnp.int32)
+        k_pos = jnp.arange(T, dtype=jnp.int32)
+    return q, k, v, q_pos, k_pos
+
+
+def _run(q, k, v, q_pos, k_pos, geom, exp_fn, kv_chunk=KV_CHUNK):
+    return flash_attention(q, k, v, q_pos, k_pos, causal=geom["causal"],
+                           window=geom["window"], kv_chunk=kv_chunk,
+                           exp_fn=exp_fn)
+
+
+# --------------------------------------------------------------------------------------
+# The bound itself
+# --------------------------------------------------------------------------------------
+
+class TestBoundMath:
+    def test_lookup_delta_includes_underflow_tail(self):
+        # the zero tail drops at most exp(lo) of true weight (z just below
+        # lo): the uniform per-lookup error is e_a plus that floor
+        import math
+        assert lookup_delta(1e-4) == pytest.approx(1e-4 + math.exp(EXP_NEG_LO))
+
+    def test_weight_error_monotone_in_chunks(self):
+        d = lookup_delta(1e-4)
+        assert weight_error(1, d) < weight_error(3, d) < weight_error(8, d)
+        with pytest.raises(ValueError):
+            weight_error(0, d)
+
+    def test_bound_scales_and_degenerates(self):
+        b1 = flash_abs_bound(1e-6, 32, 8, 1.0)
+        assert 0 < b1 < flash_abs_bound(1e-4, 32, 8, 1.0)
+        assert flash_abs_bound(1e-6, 32, 8, 2.0) == pytest.approx(2 * b1)
+        # kv_chunk > n_keys is clamped, not an error
+        assert flash_abs_bound(1e-6, 4, 1024, 1.0) == \
+            flash_abs_bound(1e-6, 4, 4, 1.0)
+        # outside the validity region (Tp * eps_w >= 1) the bound is inf
+        assert flash_abs_bound(0.5, 1 << 20, 1, 1.0) == float("inf")
+
+
+# --------------------------------------------------------------------------------------
+# Flash-level contract: every table mode x every geometry
+# --------------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("geom_name", sorted(GEOMETRIES))
+@pytest.mark.parametrize("mode", TABLE_MODES)
+class TestFlashErrorContract:
+    def test_error_within_bound(self, mode, geom_name):
+        geom = GEOMETRIES[geom_name]
+        q, k, v, q_pos, k_pos = _inputs(geom)
+        fn = ApproxConfig(mode=mode, e_a=EA, omega=0.2,
+                          attn_table=True).attn_exp()
+        assert fn is not None
+        exact = np.asarray(_run(q, k, v, q_pos, k_pos, geom, None))
+        table = np.asarray(_run(q, k, v, q_pos, k_pos, geom, fn))
+        bound = flash_abs_bound(EA_EFF, T, KV_CHUNK,
+                                float(jnp.max(jnp.abs(v))))
+        err = float(np.max(np.abs(exact - table)))
+        assert np.isfinite(bound) and err <= bound, \
+            f"{mode}/{geom_name}: err {err:.3e} > bound {bound:.3e}"
+
+    def test_grads_finite(self, mode, geom_name):
+        geom = GEOMETRIES[geom_name]
+        q, k, v, q_pos, k_pos = _inputs(geom)
+        fn = ApproxConfig(mode=mode, e_a=EA, omega=0.2,
+                          attn_table=True).attn_exp()
+
+        def loss(qq, kk, vv):
+            return jnp.sum(_run(qq, kk, vv, q_pos, k_pos, geom, fn))
+
+        grads = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+        for g in grads:
+            assert bool(jnp.isfinite(g).all()), f"{mode}/{geom_name}"
+
+
+# --------------------------------------------------------------------------------------
+# Kernel parity + gating
+# --------------------------------------------------------------------------------------
+
+class TestKernelParity:
+    def test_pallas_bitwise_equals_oracle(self):
+        cfg = ApproxConfig(mode="table_pack", e_a=EA, attn_table=True)
+        pack = cfg.pack()
+        # span the domain plus a deep below-lo tail (the underflow path) and
+        # the pinned x = 0 edge
+        x = jnp.asarray(np.concatenate([
+            np.linspace(-40.0, 0.0, 2048), [0.0, -16.0, float(KV_PAD)],
+        ]).astype(np.float32))
+        # bitwise parity holds under jit (the conformance-matrix contract:
+        # same XLA fma contraction on both sides)
+        y_pal = jax.jit(make_attn_exp_fn(pack, use_pallas=True))(x)
+        y_ref = jax.jit(make_attn_exp_fn(pack, use_pallas=False))(x)
+        np.testing.assert_array_equal(np.asarray(y_pal), np.asarray(y_ref))
+        # below lo the tail is EXACTLY 0 (masked slots keep weight 0);
+        # x = lo itself is in-domain and serves exp(-16) > 0
+        assert float(y_pal[-1]) == float(y_pal[0]) == 0.0
+        assert float(y_pal[-2]) > 0.0
+        # and the pinned hi edge is exp(0) within e_a
+        assert abs(float(y_pal[-3]) - 1.0) <= EA_EFF
+
+    def test_gating(self):
+        assert ApproxConfig(mode="exact", attn_table=True).attn_exp() is None
+        assert ApproxConfig(mode="table_pack_ref").attn_exp() is None
+        with pytest.raises(ValueError, match="unknown approx mode"):
+            ApproxConfig(mode="bogus", attn_table=True).attn_exp()
+        with pytest.raises(KeyError, match="exp_neg"):
+            ApproxConfig(mode="table_pack_ref", attn_table=True,
+                         pack_functions=("gelu", "tanh")).attn_exp()
+
+
+# --------------------------------------------------------------------------------------
+# End-to-end decode identity at E_a = 1e-6 (the rope_table precedent)
+# --------------------------------------------------------------------------------------
+
+def _decode_identity(arch_id):
+    """attn_table on/off must be token-identical, greedy, through BOTH
+    schedulers: the only delta between the engines is _flash_inner's exp
+    hook, and at e_a=1e-6 the lookup error is below bf16 resolution."""
+    base = reduced(arch_id)
+    outs = []
+    for attn_table in (False, True):
+        cfg = base.replace(approx=ApproxConfig(
+            mode="table_pack_ref", e_a=1e-6, omega=0.2,
+            attn_table=attn_table))
+        model = build_model(cfg)
+        assert (model.attn_exp is not None) == attn_table
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(17)
+        reqs = mixed_requests(rng, 5, lo_new=2, hi_new=6)
+        cont = ContinuousEngine(model, params, batch_size=2,
+                                cache_len=64).serve(reqs)
+        rng = np.random.default_rng(17)
+        reqs = mixed_requests(rng, 5, lo_new=2, hi_new=6)
+        stat = serve_static(model, params, reqs, batch_size=2, cache_len=64)
+        outs.append((cont, stat))
+    (cont_e, stat_e), (cont_t, stat_t) = outs
+    for i, (a, b) in enumerate(zip(cont_e, cont_t)):
+        np.testing.assert_array_equal(a.tokens, b.tokens,
+                                      err_msg=f"continuous req {i}")
+        assert a.steps == b.steps
+    for i, (a, b) in enumerate(zip(stat_e, stat_t)):
+        np.testing.assert_array_equal(a.tokens, b.tokens,
+                                      err_msg=f"static req {i}")
+
+
+class TestDecodeIdentity:
+    def test_stablelm(self):
+        _decode_identity("stablelm-3b")
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("arch_id", ["gemma3-12b", "zamba2-1.2b",
+                                         "xlstm-125m"])
+    def test_families(self, arch_id):
+        _decode_identity(arch_id)
+
+
+# --------------------------------------------------------------------------------------
+# KV_PAD telemetry regression
+# --------------------------------------------------------------------------------------
+
+class TestPadTelemetry:
+    def _oob_count(self, k_pos_row, kv_chunk):
+        """One decode-style row (B=Sq=G=Qg=1) through instrumented flash;
+        returns the approx.oob.attn_exp counter after the run."""
+        obs.reset_registry()
+        cfg = ApproxConfig(mode="table_pack_ref", e_a=EA, attn_table=True)
+        fn = cfg.attn_exp()
+        assert getattr(fn, "wants_count_mask", False)
+        rng = np.random.default_rng(3)
+        t = len(k_pos_row)
+        q = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 1, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (1, t, 1, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (1, t, 1, D)), jnp.float32)
+        out = flash_attention(q, k, v, jnp.asarray([t - 1], jnp.int32),
+                              jnp.asarray(k_pos_row, jnp.int32), causal=True,
+                              kv_chunk=kv_chunk, exp_fn=fn)
+        jax.block_until_ready(out)
+        jax.effects_barrier()
+        return obs.get_registry().summary()["counters"].get(
+            "approx.oob.attn_exp", 0)
+
+    def test_chunk_pads_excluded_genuine_slots_counted(self):
+        try:
+            obs.configure(enabled=True, device_telemetry=True)
+            # T=4 at kv_chunk=4: no padding.  kv_chunk=3 pads to Tp=6 (two
+            # KV_PAD slots) — the count must NOT change: pad rows are a
+            # chunking artifact, not approximation events.
+            base = self._oob_count([0, 1, 2, 3], kv_chunk=4)
+            padded = self._oob_count([0, 1, 2, 3], kv_chunk=3)
+            assert padded == base
+            # a genuine empty cache slot (k_pos == -1) IS a clamp event:
+            # exactly one more masked key for the single query row
+            empty = self._oob_count([0, 1, 2, -1], kv_chunk=4)
+            assert empty == base + 1
+        finally:
+            obs.disable()
+
+    def test_masked_slot_count_is_exact(self):
+        try:
+            obs.configure(enabled=True, device_telemetry=True)
+            # 2 genuine empty slots + alpha's first-chunk -inf seed (1 row):
+            # the counter is exact, not merely monotone
+            n = self._oob_count([0, 1, -1, -1], kv_chunk=4)
+            assert n == 2 + 1
+        finally:
+            obs.disable()
